@@ -1,0 +1,63 @@
+"""Paper Table 4: batch updates with Zipf-distributed row frequency.
+
+A batch of 1000 rank-1 row updates collapses to a rank-r update where r =
+number of *distinct* rows touched; skewed (high Zipf factor) batches stay
+low-rank and cheap, uniform batches approach full rank and INCR loses its
+advantage — exactly the paper's observation.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.apps import MatrixPowers
+from repro.data.updates import UpdateStream
+from .common import emit
+
+
+def merge_batch_by_row(stream: UpdateStream, count: int):
+    """Collapse ``count`` rank-1 row updates into one rank-r update with
+    r = distinct rows (sum deltas per row) — the LINVIEW batching rule."""
+    rng = np.random.default_rng(stream.seed)
+    per_row = {}
+    for _ in range(count):
+        u, v = stream.next_update(rng)
+        row = int(np.argmax(u[:, 0]))
+        per_row[row] = per_row.get(row, 0) + v[:, 0]
+    rows = sorted(per_row)
+    u = np.zeros((stream.n, len(rows)), np.float32)
+    v = np.zeros((stream.m, len(rows)), np.float32)
+    for j, r in enumerate(rows):
+        u[r, j] = 1.0
+        v[:, j] = per_row[r]
+    return u, v
+
+
+def main(n: int = 256, k: int = 16, batch: int = 1000):
+    for zipf in (5.0, 4.0, 3.0, 2.0, 1.2, 0.0):
+        stream = UpdateStream(n=n, m=n, zipf=zipf or None, scale=0.01,
+                              seed=11)
+        u, v = merge_batch_by_row(stream, batch)
+        rank = u.shape[1]
+        app = MatrixPowers(n=n, k=k, model="exp", rank=rank)
+        app.initialize(MatrixPowers.synthesize(n, seed=0))
+        uj, vj = jnp.asarray(u), jnp.asarray(v)
+        jax.block_until_ready(app.update(uj, vj))   # warm
+        t0 = time.perf_counter()
+        jax.block_until_ready(app.update(uj, vj))
+        t_incr = time.perf_counter() - t0
+        jax.block_until_ready(app.update_reeval(uj, vj))
+        t0 = time.perf_counter()
+        jax.block_until_ready(app.update_reeval(uj, vj))
+        t_reeval = time.perf_counter() - t0
+        emit(f"table4_zipf{zipf}", t_incr * 1e6,
+             f"rank={rank};reeval_us={t_reeval*1e6:.1f};"
+             f"speedup={t_reeval/t_incr:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

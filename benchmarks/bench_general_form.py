@@ -1,0 +1,37 @@
+"""Paper Fig. 3g (B=0, varying p: REEVAL vs INCR vs HYBRID) and Fig. 3h
+(B≠0: gradient-descent linear regression, all models)."""
+
+from __future__ import annotations
+
+from repro.apps import BatchGradientDescent, GeneralIterative
+from .common import bench_app, emit
+
+
+def fig3g(n: int = 256, k: int = 16):
+    """T_{i+1} = A·T_i with p ∈ {1, 32, 128}: hybrid wins at p=1 (the
+    paper's 16%-over-reeval observation), factored wins at large p."""
+    for p in (1, 32, 128):
+        for rep, tag in ((None, "auto"), ("lowrank", "incr"),
+                         ("dense", "hybrid")):
+            app = GeneralIterative(n=n, p=p, k=k, model="linear",
+                                   with_b=False, force_rep=rep)
+            app.initialize(GeneralIterative.synthesize(n, p, with_b=False))
+            bench_app(f"fig3g_p{p}_{tag}", app, n, extra=f";p={p};rep={tag}")
+
+
+def fig3h(n: int = 192, p: int = 32, k: int = 16):
+    """BGD linear regression (paper: n=30k, p=1000, k=16, 36.7× gap)."""
+    m = n
+    for model in ("linear", "exp", "skip"):
+        app = BatchGradientDescent(m=m, n=n, p=p, k=k, eta=1e-2, model=model)
+        app.initialize(BatchGradientDescent.synthesize(m, n, p))
+        bench_app(f"fig3h_bgd_{model}", app, m, n, extra=f";model={model}")
+
+
+def main():
+    fig3g()
+    fig3h()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Paper Fig. 3a (strategies × models), Fig. 3b (scaling n), Fig. 3c
+(scaling k): matrix powers A^k under rank-1 row updates."""
+
+from __future__ import annotations
+
+from repro.apps import MatrixPowers
+from .common import bench_app, emit
+
+
+def fig3a(n: int = 384, k: int = 16):
+    """All evaluation strategies at fixed n, k (paper: n=10k/30k, k=16)."""
+    for model in ("linear", "exp", "skip"):
+        app = MatrixPowers(n=n, k=k, model=model, s=4)
+        app.initialize(MatrixPowers.synthesize(n, seed=0))
+        bench_app(f"fig3a_powers_{model}_n{n}_k{k}", app, n,
+                  extra=f";model={model}")
+
+
+def fig3b(k: int = 16):
+    """Scaling with n (paper: n up to 90k on Spark)."""
+    for n in (128, 256, 512, 768):
+        app = MatrixPowers(n=n, k=k, model="exp")
+        app.initialize(MatrixPowers.synthesize(n, seed=0))
+        r = bench_app(f"fig3b_powers_exp_n{n}", app, n)
+        emit(f"fig3b_flops_ratio_n{n}",
+             app.engine.reeval_flops() / app.engine.trigger_flops("A"),
+             "analytic reeval/incr FLOP ratio")
+
+
+def fig3c(n: int = 256):
+    """Scaling with iterations k (paper: k up to 256)."""
+    for k in (4, 16, 64):
+        app = MatrixPowers(n=n, k=k, model="exp")
+        app.initialize(MatrixPowers.synthesize(n, seed=0))
+        bench_app(f"fig3c_powers_exp_k{k}", app, n, extra=f";k={k}")
+
+
+def main():
+    fig3a()
+    fig3b()
+    fig3c()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Paper Table 3: memory requirements vs speedup for A^16.
+
+INCR materializes every intermediate P_i (the price of incrementality);
+REEVAL keeps only the current value.  We measure actual view-store bytes
+and the speedup per update, reporting the paper's speedup-vs-memory-cost
+ratio for growing n.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.apps import MatrixPowers
+from repro.data.updates import UpdateStream
+from .common import emit, time_updates
+
+
+def view_bytes(engine) -> int:
+    return sum(v.size * v.dtype.itemsize for v in engine.views.values())
+
+
+def main(k: int = 16):
+    for n in (128, 256, 512):
+        app = MatrixPowers(n=n, k=k, model="exp")
+        app.initialize(MatrixPowers.synthesize(n, seed=0))
+        stream = UpdateStream(n=n, m=n, scale=0.02, seed=3)
+        t_incr = time_updates(app.update, stream)
+        t_reeval = time_updates(app.update_reeval, stream)
+        mem_incr = view_bytes(app.engine)
+        mem_reeval = view_bytes(app.reeval) * (2 / len(app.engine.views))
+        # reeval only needs A and the running square (2 matrices)
+        mem_reeval = 2 * n * n * 4
+        speedup = t_reeval / t_incr
+        overhead = mem_incr / mem_reeval
+        emit(f"table3_n{n}", t_incr * 1e6,
+             f"mem_incr_MB={mem_incr/2**20:.1f};"
+             f"mem_reeval_MB={mem_reeval/2**20:.1f};"
+             f"speedup={speedup:.2f}x;ratio={speedup/overhead:.2f}")
+
+
+if __name__ == "__main__":
+    main()

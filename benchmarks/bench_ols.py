@@ -1,0 +1,27 @@
+"""Paper Fig. 3e: OLS incremental maintenance vs re-evaluation, scaling n.
+
+The paper reports the REEVAL/INCR gap growing from 3.56× (n=4k) to 11.45×
+(n=20k) on Octave; we reproduce the same asymptotic divergence at
+container scale and report the analytic FLOP ratio alongside.
+"""
+
+from __future__ import annotations
+
+from repro.apps import OLS
+from .common import bench_app, emit
+
+
+def main():
+    for n in (64, 128, 256, 384):
+        m = 2 * n
+        app = OLS(m, n, p=1)
+        inputs, _ = OLS.synthesize(m, n, 1, seed=0)
+        app.initialize(inputs)
+        r = bench_app(f"fig3e_ols_n{n}", app, m, n)
+        emit(f"fig3e_ols_flops_ratio_n{n}",
+             app.engine.reeval_flops() / app.engine.trigger_flops("X"),
+             "analytic reeval/incr FLOP ratio")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,17 @@
+"""Paper Fig. 3d: sums of matrix powers S_k, INCR-EXP vs REEVAL-EXP."""
+
+from __future__ import annotations
+
+from repro.apps import SumsOfPowers
+from .common import bench_app
+
+
+def main():
+    for n in (128, 256, 512):
+        app = SumsOfPowers(n=n, k=16, model="exp")
+        app.initialize(SumsOfPowers.synthesize(n, seed=0))
+        bench_app(f"fig3d_sums_exp_n{n}", app, n)
+
+
+if __name__ == "__main__":
+    main()

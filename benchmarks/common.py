@@ -1,0 +1,55 @@
+"""Benchmark harness shared plumbing.
+
+Every bench measures *average view-refresh time per update* (the paper's
+metric, §7) for REEVAL / INCR / HYBRID over a stream of rank-1 row
+updates, and prints ``name,us_per_call,derived`` CSV rows.  Sizes are
+scaled to the CPU container; the trends (not the absolute numbers) are
+what reproduce the paper's figures — EXPERIMENTS.md compares them.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, Iterable, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.updates import UpdateStream
+
+ROWS: List[str] = []
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    row = f"{name},{us_per_call:.1f},{derived}"
+    ROWS.append(row)
+    print(row, flush=True)
+
+
+def time_updates(apply_fn: Callable, stream: Iterable, n_updates: int = 5,
+                 warmup: int = 1) -> float:
+    """Average seconds per update (jit-warmed, blocked)."""
+    it = iter(stream)
+    for _ in range(warmup):
+        u, v = next(it)
+        jax.block_until_ready(apply_fn(jnp.asarray(u), jnp.asarray(v)))
+    t0 = time.perf_counter()
+    for _ in range(n_updates):
+        u, v = next(it)
+        jax.block_until_ready(apply_fn(jnp.asarray(u), jnp.asarray(v)))
+    return (time.perf_counter() - t0) / n_updates
+
+
+def bench_app(name: str, app, n: int, m: Optional[int] = None,
+              n_updates: int = 5, scale: float = 0.05,
+              extra: str = "") -> Dict[str, float]:
+    """Times INCR and REEVAL paths of an App; returns seconds per update."""
+    m = m if m is not None else n
+    stream = UpdateStream(n=n, m=m, scale=scale, seed=7)
+    t_incr = time_updates(app.update, stream, n_updates)
+    t_reeval = time_updates(app.update_reeval, stream, n_updates)
+    speedup = t_reeval / t_incr
+    emit(f"{name}_incr", t_incr * 1e6, f"speedup={speedup:.2f}x{extra}")
+    emit(f"{name}_reeval", t_reeval * 1e6, extra.lstrip(";"))
+    return {"incr": t_incr, "reeval": t_reeval, "speedup": speedup}

@@ -1,0 +1,54 @@
+"""Quickstart: LINVIEW in 60 lines.
+
+Define a linear-algebra program, compile it into update triggers, and
+maintain its views under a stream of rank-1 updates — comparing against
+full re-evaluation.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import (IncrementalEngine, Program, ReevalEngine, dim,
+                        inverse, matmul, transpose)
+
+# --- 1. write the program (paper §3): OLS  β* = (XᵀX)⁻¹ Xᵀ Y -------------
+m, n = 512, 128
+prog = Program(name="ols")
+M, N = dim("m"), dim("n")
+X = prog.input("X", (M, N))
+Y = prog.input("Y", (M, 1))
+Z = prog.let("Z", matmul(transpose(X), X))
+W = prog.let("W", inverse(Z))
+beta = prog.let("beta", matmul(W, matmul(transpose(X), Y)))
+prog.bind_dims(m=m, n=n)
+print(prog)
+
+# --- 2. compile to triggers (paper Alg. 1) --------------------------------
+engine = IncrementalEngine(prog, update_ranks={"X": 1})
+print()
+print(engine.compiled.triggers["X"])   # the generated trigger program
+
+# --- 3. initialize the views ----------------------------------------------
+rng = np.random.default_rng(0)
+Xv = jnp.asarray(rng.normal(size=(m, n)), jnp.float32)
+Yv = jnp.asarray(rng.normal(size=(m, 1)), jnp.float32)
+engine.initialize({"X": Xv, "Y": Yv})
+
+baseline = ReevalEngine(prog)
+baseline.initialize({"X": Xv, "Y": Yv})
+
+# --- 4. stream updates: one row of X changes ------------------------------
+for step in range(5):
+    u = np.zeros((m, 1), np.float32)
+    u[rng.integers(0, m)] = 1.0
+    v = (rng.normal(size=(n, 1)) * 0.1).astype(np.float32)
+    engine.apply_update("X", jnp.asarray(u), jnp.asarray(v))
+    baseline.apply_update("X", jnp.asarray(u), jnp.asarray(v))
+    err = float(jnp.max(jnp.abs(engine.output() - baseline.output())))
+    print(f"update {step}: max|Δβ*| between INCR and REEVAL = {err:.2e}")
+
+print(f"\nanalytic FLOPs: trigger {engine.trigger_flops('X'):.2e} vs "
+      f"re-evaluation {engine.reeval_flops():.2e} "
+      f"({engine.reeval_flops()/engine.trigger_flops('X'):.1f}× less work)")

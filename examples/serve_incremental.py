@@ -1,0 +1,75 @@
+"""Serving + incremental view maintenance (DESIGN.md §4.3):
+
+1. serve a small LM with batched requests,
+2. cache classifier logits over a "corpus" of prompts,
+3. hot-swap a rank-1 head update (one token's output row retrained) and
+   maintain the cached logits through the LINVIEW trigger instead of
+   re-running the model over the corpus.
+
+  PYTHONPATH=src python examples/serve_incremental.py
+"""
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.launch.train import custom_10m
+from repro.models import build_model
+from repro.serve import IncrementalLogitView, ServeEngine
+
+
+def main():
+    cfg = custom_10m()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    # --- 1. batched generation -------------------------------------------
+    eng = ServeEngine(model, params, batch_size=4, max_seq=256)
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(1, cfg.vocab, size=(4, 12)).astype(np.int32)
+    t0 = time.perf_counter()
+    out = eng.generate(prompts, max_new=12)
+    print(f"generated {out.shape} tokens in {time.perf_counter()-t0:.2f}s")
+
+    # --- 2. corpus logit cache --------------------------------------------
+    corpus = rng.integers(1, cfg.vocab, size=(64, 24)).astype(np.int32)
+    logits, _ = model.forward(params, {"tokens": jnp.asarray(corpus)})
+    hidden_like = np.asarray(logits[:, -1, :])  # (64, vocab) cached scores
+    # maintain final-layer view: H = last hidden states, W = lm head
+    # (recompute H once with the frozen backbone)
+    h, _ = model.backbone(params, *(model.embed_inputs(
+        params, {"tokens": jnp.asarray(corpus)})[:2]),)
+    from repro.models import layers as L
+    h = L.rmsnorm(params["final_norm"], h, cfg.norm_eps)[:, -1, :]
+    W = params["lm_head"]["table"]
+    view = IncrementalLogitView(np.asarray(h, np.float32),
+                                np.asarray(W, np.float32), rank=1)
+
+    # --- 3. rank-1 adapter hot-swap ---------------------------------------
+    tok = 1234
+    u = np.zeros((cfg.vocab, 1), np.float32)
+    u[tok] = 1.0
+    v = (0.05 * rng.normal(size=(cfg.d_model, 1))).astype(np.float32)
+
+    t0 = time.perf_counter()
+    maintained = view.update_head(jnp.asarray(u), jnp.asarray(v))
+    jax.block_until_ready(maintained)
+    t_incr = time.perf_counter() - t0
+
+    # ground truth: re-encode the corpus with the patched head
+    t0 = time.perf_counter()
+    W2 = W + jnp.asarray(u @ v.T, W.dtype)
+    truth = np.asarray(h, np.float32) @ np.asarray(W2, np.float32).T
+    t_reeval = time.perf_counter() - t0
+
+    err = float(np.max(np.abs(np.asarray(maintained) - truth)))
+    print(f"hot-swap: maintained 64×{cfg.vocab} logit view in "
+          f"{t_incr*1e3:.2f} ms (recompute {t_reeval*1e3:.2f} ms), "
+          f"max err {err:.2e}")
+    print(f"analytic speedup for this view: {view.speedup_estimate():.1f}×")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,17 @@
+"""Analytics applications from the paper (§5), built on the LINVIEW core."""
+
+from .ols import build_ols_program, OLS
+from .matrix_powers import build_powers_program, MatrixPowers
+from .sums_powers import build_sums_program, SumsOfPowers
+from .general_iterative import build_general_program, GeneralIterative
+from .pagerank import build_pagerank_program, PageRank
+from .gradient_descent import build_bgd_program, BatchGradientDescent
+
+__all__ = [
+    "build_ols_program", "OLS",
+    "build_powers_program", "MatrixPowers",
+    "build_sums_program", "SumsOfPowers",
+    "build_general_program", "GeneralIterative",
+    "build_pagerank_program", "PageRank",
+    "build_bgd_program", "BatchGradientDescent",
+]

@@ -1,0 +1,76 @@
+"""Shared app scaffolding: every app exposes the same engine triple
+(incremental / re-evaluation / hybrid-forced) so benchmarks and tests treat
+them uniformly."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import IncrementalEngine, Program, ReevalEngine
+
+Array = jax.Array
+
+
+@dataclass
+class AppEngines:
+    program: Program
+    incremental: IncrementalEngine
+    reeval: ReevalEngine
+
+    def initialize(self, inputs: Dict[str, Array]):
+        self.incremental.initialize(inputs)
+        self.reeval.initialize(inputs)
+
+    def update_both(self, input_name: str, u: Array, v: Array):
+        self.incremental.apply_update(input_name, u, v)
+        self.reeval.apply_update(input_name, u, v)
+
+    def divergence(self, name: Optional[str] = None) -> float:
+        name = name or self.program.output_names()[0]
+        a = self.incremental.views[name]
+        b = self.reeval.views[name]
+        scale = float(jnp.max(jnp.abs(b))) or 1.0
+        return float(jnp.max(jnp.abs(a - b))) / scale
+
+
+class App:
+    """Base: subclasses set ``self.program`` and ``self.update_input``."""
+
+    program: Program
+    update_input: str
+
+    def __init__(self, program: Program, update_input: str, rank: int = 1,
+                 force_rep: Optional[str] = None, sequential_sm: bool = False,
+                 apply_backend: str = "xla", jit: bool = True):
+        self.program = program
+        self.update_input = update_input
+        self.rank = rank
+        self.engine = IncrementalEngine(
+            program, {update_input: rank}, force_rep=force_rep,
+            sequential_sm=sequential_sm, apply_backend=apply_backend, jit=jit)
+        self.reeval = ReevalEngine(program, jit=jit)
+
+    def initialize(self, inputs: Dict[str, Array]):
+        self.engine.initialize(inputs)
+        self.reeval.initialize(inputs)
+        return self
+
+    def update(self, u: Array, v: Array) -> Array:
+        self.engine.apply_update(self.update_input, u, v)
+        return self.engine.output()
+
+    def update_reeval(self, u: Array, v: Array) -> Array:
+        self.reeval.apply_update(self.update_input, u, v)
+        return self.reeval.output()
+
+    def output(self) -> Array:
+        return self.engine.output()
+
+    def speedup_estimate(self) -> float:
+        """Analytic FLOP ratio reeval/incremental for one update."""
+        return (self.engine.reeval_flops() /
+                max(self.engine.trigger_flops(self.update_input), 1.0))

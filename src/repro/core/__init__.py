@@ -1,0 +1,38 @@
+"""LINVIEW core: incremental view maintenance for linear-algebra programs.
+
+Public API:
+
+    from repro.core import (
+        Program, dim, var, matmul, add, transpose, inverse,
+        compile_program, IncrementalEngine, ReevalEngine,
+    )
+"""
+
+from .expr import (Dim, Expr, ShapeError, Var, add, const, identity, inverse,
+                   matmul, scale, sub, transpose, var, zero)
+from .program import Program, Statement, dim
+from .factored import DeltaRep, DenseDelta, HStack, LowRank
+from .delta import DeltaEnv, derive, IncrementalInverseError
+from .compiler import (Assign, CompiledProgram, Trigger, ViewUpdate,
+                       compile_program, extract_inverse_views)
+from .codegen import build_evaluator, build_trigger_fn, evaluate
+from .runtime import IncrementalEngine, ReevalEngine, max_abs_diff
+from .cost import Cost, expr_cost, lowrank_cost
+from .sherman_morrison import (sherman_morrison, sherman_morrison_delta,
+                               woodbury, woodbury_delta)
+from . import iterative
+
+__all__ = [
+    "Dim", "Expr", "ShapeError", "Var", "add", "const", "identity",
+    "inverse", "matmul", "scale", "sub", "transpose", "var", "zero",
+    "Program", "Statement", "dim",
+    "DeltaRep", "DenseDelta", "HStack", "LowRank",
+    "DeltaEnv", "derive", "IncrementalInverseError",
+    "Assign", "CompiledProgram", "Trigger", "ViewUpdate",
+    "compile_program", "extract_inverse_views",
+    "build_evaluator", "build_trigger_fn", "evaluate",
+    "IncrementalEngine", "ReevalEngine", "max_abs_diff",
+    "Cost", "expr_cost", "lowrank_cost",
+    "sherman_morrison", "sherman_morrison_delta", "woodbury",
+    "woodbury_delta", "iterative",
+]

@@ -1,0 +1,192 @@
+"""Codegen: symbolic expressions / triggers → jitted JAX callables.
+
+The evaluator stages a trigger body into a single XLA program: every factor
+block is a chain of (big × skinny) or (skinny × skinny) matmuls, and the
+``+=`` updates donate the view buffers so the update happens in place.
+
+Backends for the rank-k apply (``M += U Vᵀ``) are pluggable:
+  - "xla": plain jnp (default everywhere),
+  - "pallas": the VMEM-tiled TPU kernel from ``repro.kernels.rank_update``
+    (interpret-mode on CPU; the kernel is the TPU hot path).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import expr as ex
+from .compiler import Assign, CompiledProgram, Trigger, ViewUpdate
+from .expr import Expr
+from .factored import ColSlice, HStack
+from .program import Program
+
+
+Array = jax.Array
+Env = Dict[str, Array]
+
+
+def _dim(d, binding: Dict[str, int]) -> int:
+    return binding[d.name] if isinstance(d, ex.Dim) else int(d)
+
+
+def evaluate(e: Expr, env: Env, binding: Dict[str, int],
+             cache: Optional[Dict[int, Array]] = None) -> Array:
+    """Evaluate a symbolic expression against concrete arrays.
+
+    ``cache`` keyed by interned node id gives cross-expression CSE: blocks
+    of the same trigger share subcomputations for free.
+    """
+    if cache is None:
+        cache = {}
+
+    def go(x: Expr) -> Array:
+        hit = cache.get(id(x))
+        if hit is not None:
+            return hit
+        out = _eval_node(x, env, binding, go)
+        cache[id(x)] = out
+        return out
+
+    return go(e)
+
+
+def _eval_node(x: Expr, env: Env, binding, go) -> Array:
+    if isinstance(x, ex.Var):
+        try:
+            return env[x.name]
+        except KeyError:
+            raise KeyError(f"unbound variable {x.name}; have {sorted(env)}")
+    if isinstance(x, ex.Zero):
+        return jnp.zeros((_dim(x.shape[0], binding), _dim(x.shape[1], binding)),
+                         dtype=jnp.float32)
+    if isinstance(x, ex.Identity):
+        return jnp.eye(_dim(x.shape[0], binding), dtype=jnp.float32)
+    if isinstance(x, ex.Const):
+        return jnp.full((1, 1), x.value, dtype=jnp.float32)
+    if isinstance(x, ex.MatMul):
+        return go(x.lhs) @ go(x.rhs)
+    if isinstance(x, ex.Add):
+        terms = [go(t) for t in x.terms]
+        return functools.reduce(jnp.add, terms)
+    if isinstance(x, ex.Scale):
+        f = go(x.factor)
+        if f.ndim == 2:  # (1,1) scalar view
+            f = f[0, 0]
+        return f * go(x.operand)
+    if isinstance(x, ex.Transpose):
+        return go(x.operand).T
+    if isinstance(x, ex.Inverse):
+        a = go(x.operand)
+        if a.shape == (1, 1):
+            return 1.0 / a
+        return jnp.linalg.inv(a)
+    if isinstance(x, HStack):
+        return jnp.concatenate([go(b) for b in x.blocks], axis=1)
+    if isinstance(x, ColSlice):
+        return go(x.operand)[:, x.col:x.col + 1]
+    raise TypeError(f"cannot evaluate {type(x).__name__}")
+
+
+# ---------------------------------------------------------------------------
+# program re-evaluation (the paper's baseline strategy)
+# ---------------------------------------------------------------------------
+
+
+def build_evaluator(program: Program,
+                    binding: Optional[Dict[str, int]] = None,
+                    jit: bool = True) -> Callable[[Env], Env]:
+    """Full re-evaluation: returns {view name: value} for all statements."""
+    binding = dict(program.dims if binding is None else binding)
+
+    def run(inputs: Env) -> Env:
+        env: Env = dict(inputs)
+        cache: Dict[int, Array] = {}
+        out: Env = {}
+        for st in program.statements:
+            val = evaluate(st.expr, env, binding, cache)
+            env[st.target.name] = val
+            out[st.target.name] = val
+        return out
+
+    return jax.jit(run) if jit else run
+
+
+# ---------------------------------------------------------------------------
+# trigger execution (the incremental strategy)
+# ---------------------------------------------------------------------------
+
+
+def _apply_lowrank_xla(view: Array, u: Array, v: Array) -> Array:
+    return view + u @ v.T
+
+
+def _get_apply_fn(backend: str):
+    if backend == "xla":
+        return _apply_lowrank_xla
+    if backend == "pallas":
+        from repro.kernels import ops as rk_ops
+        return rk_ops.rank_update
+    raise ValueError(f"unknown apply backend {backend!r}")
+
+
+def build_trigger_fn(trigger: Trigger, program: Program,
+                     binding: Optional[Dict[str, int]] = None,
+                     jit: bool = True,
+                     apply_backend: str = "xla",
+                     donate: bool = True) -> Callable[[Env, Array, Array], Env]:
+    """Stage a trigger into ``(views, U, V) -> new views``.
+
+    ``views`` must contain the input matrices and every maintained view.
+    The returned dict contains updated values for the affected entries and
+    passes through the rest.
+    """
+    binding = dict(program.dims if binding is None else binding)
+    apply_fn = _get_apply_fn(apply_backend)
+
+    def run(views: Env, u: Array, v: Array) -> Env:
+        env: Env = dict(views)
+        env[trigger.u_var.name] = u
+        env[trigger.v_var.name] = v
+        cache: Dict[int, Array] = {}
+        for a in trigger.assigns:
+            env[a.name] = evaluate(a.expr, env, binding, cache)
+        out = dict(views)
+        for up in trigger.updates:
+            if up.kind == "lowrank":
+                out[up.view] = apply_fn(env[up.view], env[up.u], env[up.v])
+            else:
+                out[up.view] = env[up.view] + env[up.d]
+        return out
+
+    if jit:
+        run = jax.jit(run, donate_argnums=(0,) if donate else ())
+    return run
+
+
+def trigger_flops(trigger: Trigger, program: Program,
+                  binding: Optional[Dict[str, int]] = None) -> float:
+    """Analytic FLOP count of one trigger firing (cost-model §3)."""
+    from .cost import apply_update_cost, expr_cost, shape_of
+    binding = dict(program.dims if binding is None else binding)
+    total = 0.0
+    seen: Dict[int, bool] = {}
+    from .cost import _expr_cost_shared
+    for a in trigger.assigns:
+        total += _expr_cost_shared(a.expr, binding, seen).flops
+    name_to_var = {**{k: v for k, v in program.inputs.items()},
+                   **{s.target.name: s.target for s in program.statements}}
+    for up in trigger.updates:
+        view = name_to_var[up.view]
+        n, m = shape_of(view, binding)
+        if up.kind == "lowrank":
+            k = next(a.expr for a in trigger.assigns if a.name == up.u).shape[1] \
+                if any(a.name == up.u for a in trigger.assigns) else trigger.rank
+            k = k if isinstance(k, int) else binding[k.name]
+            total += apply_update_cost((n, m), k).flops
+        else:
+            total += n * m
+    return total

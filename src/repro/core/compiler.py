@@ -1,0 +1,243 @@
+"""LINVIEW compiler (paper Alg. 1 + §6 optimizer).
+
+``compile_program`` turns a :class:`Program` into one :class:`Trigger` per
+dynamic input.  Each trigger is a straight-line list of factor-block
+assignments followed by ``+=`` view updates — exactly the paper's trigger
+shape (Example 4.6), with three optimizer passes:
+
+1. **auxiliary-view extraction** — nested ``E⁻¹`` nodes are materialized as
+   views so the Woodbury/Sherman–Morrison rule can reference their old
+   value (§6 "the optimizer might define a number of auxiliary views");
+2. **common-factor extraction** — inside the delta derivation
+   (:func:`repro.core.factored.combine_blocks`);
+3. **representation choice** — per statement, the factored (incremental)
+   and single-matrix (hybrid, §5.3) delta representations are priced with
+   the cost model and the cheaper one is materialized.
+"""
+
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Dict, List, Literal, Optional, Sequence, Tuple
+
+from . import expr as ex
+from .cost import Cost, dense_delta_cost, expr_cost, lowrank_cost, shape_of
+from .delta import DeltaEnv, derive
+from .expr import Expr, Var
+from .factored import DeltaRep, DenseDelta, HStack, LowRank, _hstack
+from .program import Program, Statement
+
+
+@dataclass(frozen=True)
+class Assign:
+    """``name := expr`` inside a trigger body."""
+
+    name: str
+    expr: Expr
+
+
+@dataclass(frozen=True)
+class ViewUpdate:
+    """``view += delta`` — factored (U·Vᵀ) or dense."""
+
+    view: str
+    kind: Literal["lowrank", "dense"]
+    u: Optional[str] = None   # factored: U name
+    v: Optional[str] = None   # factored: V name
+    d: Optional[str] = None   # dense: delta name
+
+
+@dataclass
+class Trigger:
+    """ON UPDATE <input> BY (U, V): <assigns>; <updates>."""
+
+    input_name: str
+    rank: int
+    u_var: Var
+    v_var: Var
+    assigns: List[Assign] = field(default_factory=list)
+    updates: List[ViewUpdate] = field(default_factory=list)
+    cost: Cost = Cost.zero()
+    reps: Dict[str, str] = field(default_factory=dict)  # view -> chosen rep
+
+    def __repr__(self) -> str:
+        lines = [f"ON UPDATE {self.input_name} BY ({self.u_var.name}, "
+                 f"{self.v_var.name}):  # rank {self.rank}"]
+        lines += [f"  {a.name} := {a.expr!r}" for a in self.assigns]
+        for up in self.updates:
+            if up.kind == "lowrank":
+                lines.append(f"  {up.view} += {up.u} {up.v}^T")
+            else:
+                lines.append(f"  {up.view} += {up.d}")
+        return "\n".join(lines)
+
+
+@dataclass
+class CompiledProgram:
+    program: Program
+    triggers: Dict[str, Trigger]
+    # statements after the auxiliary-view pass (what the runtime evaluates)
+    statements: List[Statement] = field(default_factory=list)
+
+
+# ---------------------------------------------------------------------------
+# pass 1: auxiliary views for nested inverses
+# ---------------------------------------------------------------------------
+
+
+def extract_inverse_views(program: Program) -> Program:
+    """Materialize every ``Inverse`` node as its own view.
+
+    A statement ``W := E⁻¹`` already materializes the inverse; a nested
+    inverse inside a larger expression is hoisted into ``__auxK := E⁻¹``
+    and substituted, preserving program semantics.
+    """
+    counter = itertools.count()
+    out = Program(name=program.name, inputs=dict(program.inputs),
+                  outputs=list(program.outputs), dims=dict(program.dims))
+    known: Dict[int, Var] = {}
+
+    def hoist(e: Expr) -> Expr:
+        if isinstance(e, ex.Inverse):
+            inner = hoist(e.operand)
+            node = ex.inverse(inner)
+            if id(node) in known:
+                return known[id(node)]
+            aux = out.let(f"__aux{next(counter)}", node)
+            known[id(node)] = aux
+            return aux
+        if isinstance(e, ex.MatMul):
+            return ex.matmul(hoist(e.lhs), hoist(e.rhs))
+        if isinstance(e, ex.Add):
+            return ex.add(*[hoist(t) for t in e.terms])
+        if isinstance(e, ex.Scale):
+            return ex.scale(hoist(e.factor), hoist(e.operand))
+        if isinstance(e, ex.Transpose):
+            return ex.transpose(hoist(e.operand))
+        return e
+
+    for st in program.statements:
+        if isinstance(st.expr, ex.Inverse):
+            # top-level inverse: keep, but register as a known inverse view
+            inner = hoist(st.expr.operand)
+            node = ex.inverse(inner)
+            v = out.let(st.target.name, node)
+            known[id(node)] = v
+        else:
+            out.let(st.target.name, hoist(st.expr))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# pass 2+3: delta derivation + representation choice  (Alg. 1)
+# ---------------------------------------------------------------------------
+
+
+def compile_program(
+    program: Program,
+    update_ranks: Optional[Dict[str, int]] = None,
+    *,
+    force_rep: Optional[str] = None,      # "lowrank" | "dense" | None=cost-based
+    sequential_sm: bool = False,          # paper-faithful SM chain vs Woodbury
+) -> CompiledProgram:
+    """Alg. 1: one trigger per dynamic input matrix."""
+    program = extract_inverse_views(program)
+    update_ranks = update_ranks or {name: 1 for name in program.inputs}
+    binding = dict(program.dims)
+
+    # views map for the inverse rule: expr-id -> var, for materialized views
+    views: Dict[int, Expr] = {}
+    for st in program.statements:
+        views[id(st.expr)] = st.target
+
+    triggers: Dict[str, Trigger] = {}
+    for input_name, rank in update_ranks.items():
+        if input_name not in program.inputs:
+            raise KeyError(f"{input_name} is not an input of {program.name}")
+        triggers[input_name] = _compile_trigger(
+            program, input_name, rank, views, binding,
+            force_rep=force_rep, sequential_sm=sequential_sm)
+    return CompiledProgram(program=program, triggers=triggers,
+                           statements=list(program.statements))
+
+
+def _compile_trigger(program: Program, input_name: str, rank: int,
+                     views: Dict[int, Expr], binding: Dict[str, int],
+                     *, force_rep: Optional[str],
+                     sequential_sm: bool) -> Trigger:
+    x = program.inputs[input_name]
+    u = ex.var(f"dU_{input_name}", (x.shape[0], rank))
+    v = ex.var(f"dV_{input_name}", (x.shape[1], rank))
+
+    env = DeltaEnv(views=views, sequential_sm=sequential_sm)
+    env.deltas[input_name] = LowRank.outer(u, v)
+
+    trig = Trigger(input_name=input_name, rank=rank, u_var=u, v_var=v)
+    trig.updates.append(ViewUpdate(view=input_name, kind="lowrank",
+                                   u=u.name, v=v.name))
+    total = Cost.zero()
+
+    for st in program.statements:
+        d = derive(st.expr, env)
+        if isinstance(d, LowRank) and d.is_zero():
+            continue
+        rep = _choose_rep(d, st, binding, force_rep)
+        if rep == "dense":
+            dname = f"dD_{st.target.name}"
+            dexpr = d.value if isinstance(d, DenseDelta) else d.to_expr()
+            trig.assigns.append(Assign(dname, dexpr))
+            trig.updates.append(ViewUpdate(view=st.target.name, kind="dense",
+                                           d=dname))
+            env.deltas[st.target.name] = DenseDelta(
+                ex.var(dname, st.target.shape))
+            total = total + expr_cost(dexpr, binding)
+        else:
+            lr = d if isinstance(d, LowRank) else _refactor_dense(d)
+            uname = f"dU_{st.target.name}"
+            vname = f"dV_{st.target.name}"
+            uexpr = _hstack(lr.left)
+            vexpr = _hstack(lr.right)
+            trig.assigns.append(Assign(uname, uexpr))
+            trig.assigns.append(Assign(vname, vexpr))
+            trig.updates.append(ViewUpdate(view=st.target.name,
+                                           kind="lowrank", u=uname, v=vname))
+            k = lr.rank
+            env.deltas[st.target.name] = LowRank.outer(
+                ex.var(uname, (st.target.shape[0], k)),
+                ex.var(vname, (st.target.shape[1], k)))
+            total = total + lowrank_cost(lr, binding)
+        trig.reps[st.target.name] = rep
+    trig.cost = total
+    return trig
+
+
+def _refactor_dense(d: DenseDelta) -> LowRank:
+    raise NotImplementedError(
+        "a dense delta cannot be re-factored without value inspection "
+        "(paper §4.3); once a statement goes hybrid, downstream statements "
+        "must either stay dense or be cost-priced as dense")
+
+
+def _choose_rep(d: DeltaRep, st: Statement, binding: Dict[str, int],
+                force_rep: Optional[str]) -> str:
+    """Representation choice (§5.3 hybrid evaluation).
+
+    The factored form wins when rank ≪ min(n, m); when the view itself is
+    skinny (p comparable to the rank, e.g. p = 1 in the paper's extreme),
+    a single dense delta is cheaper.  We price both and pick.
+    """
+    if isinstance(d, DenseDelta):
+        return "dense"
+    if force_rep is not None:
+        return force_rep
+    n, m = shape_of(st.target, binding)
+    if d.rank >= min(n, m):
+        return "dense"
+    fact = lowrank_cost(d, binding).flops
+    dense = expr_cost(d.to_expr(), binding).flops
+    # materializing U,V then applying U Vᵀ touches the view once more than
+    # the dense path; fold the apply cost into the comparison.
+    fact += 2.0 * d.rank * n * m
+    dense += 2.0 * n * m
+    return "lowrank" if fact <= dense else "dense"

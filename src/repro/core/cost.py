@@ -1,0 +1,151 @@
+"""Cost model (paper §3, Table 2).
+
+Counts FLOPs and bytes for symbolic expressions under a concrete dimension
+binding.  Hash-consing makes the count CSE-aware: a shared subexpression is
+priced once, the way the generated code evaluates it.
+
+``gamma`` parametrizes the matmul exponent O(n^γ) from §3 for *asymptotic*
+reports; actual FLOP counts use the classical 2·a·b·c since that is what
+BLAS/XLA executes (the paper makes the same practical assumption).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Tuple
+
+from . import expr as ex
+from .expr import Expr
+from .factored import ColSlice, DenseDelta, HStack, LowRank
+
+
+@dataclass(frozen=True)
+class Cost:
+    flops: float
+    bytes_rw: float  # bytes read+written, 4 B/elt (f32 runtime)
+
+    def __add__(self, other: "Cost") -> "Cost":
+        return Cost(self.flops + other.flops, self.bytes_rw + other.bytes_rw)
+
+    @staticmethod
+    def zero() -> "Cost":
+        return Cost(0.0, 0.0)
+
+
+ELT = 4.0  # bytes per element
+
+
+def _dim(d, binding: Dict[str, int]) -> int:
+    if isinstance(d, ex.Dim):
+        return binding[d.name]
+    return int(d)
+
+
+def shape_of(e: Expr, binding: Dict[str, int]) -> Tuple[int, int]:
+    return (_dim(e.shape[0], binding), _dim(e.shape[1], binding))
+
+
+def expr_cost(e: Expr, binding: Dict[str, int]) -> Cost:
+    """CSE-aware cost of evaluating ``e`` once."""
+    seen: Dict[int, Cost] = {}
+
+    def go(x: Expr) -> Cost:
+        if id(x) in seen:
+            return Cost.zero()  # shared node: already priced
+        sub = Cost.zero()
+        for c in x.children:
+            sub = sub + go(c)
+        mine = _node_cost(x, binding)
+        seen[id(x)] = mine
+        return sub + mine
+
+    return go(e)
+
+
+def _node_cost(x: Expr, binding) -> Cost:
+    if isinstance(x, ex.MatMul):
+        a, b = shape_of(x.lhs, binding)
+        b2, c = shape_of(x.rhs, binding)
+        assert b == b2, (x, b, b2)
+        return Cost(2.0 * a * b * c, ELT * (a * b + b * c + a * c))
+    if isinstance(x, ex.Add):
+        n, m = shape_of(x, binding)
+        t = len(x.terms)
+        return Cost((t - 1) * n * m, ELT * t * n * m)
+    if isinstance(x, ex.Scale):
+        n, m = shape_of(x, binding)
+        return Cost(n * m, ELT * 2 * n * m)
+    if isinstance(x, ex.Transpose):
+        n, m = shape_of(x, binding)
+        return Cost(0.0, ELT * 2 * n * m)
+    if isinstance(x, ex.Inverse):
+        n, _ = shape_of(x, binding)
+        if n == 1:
+            return Cost(1.0, ELT * 2)
+        return Cost((2.0 / 3.0) * n ** 3 + 2.0 * n ** 2, ELT * 2 * n * n)
+    if isinstance(x, HStack):
+        n, m = shape_of(x, binding)
+        return Cost(0.0, ELT * 2 * n * m)
+    if isinstance(x, ColSlice):
+        n, _ = shape_of(x, binding)
+        return Cost(0.0, ELT * 2 * n)
+    # leaves
+    return Cost.zero()
+
+
+def lowrank_cost(d: LowRank, binding: Dict[str, int]) -> Cost:
+    """Cost of evaluating every factor block of a factored delta."""
+    total = Cost.zero()
+    seen: Dict[int, bool] = {}
+    for blk in list(d.left) + list(d.right):
+        # share the CSE cache across blocks
+        total = total + _expr_cost_shared(blk, binding, seen)
+    return total
+
+
+def _expr_cost_shared(e: Expr, binding, seen: Dict[int, bool]) -> Cost:
+    total = Cost.zero()
+    stack = [e]
+    order = []
+    while stack:
+        x = stack.pop()
+        if id(x) in seen:
+            continue
+        seen[id(x)] = True
+        order.append(x)
+        stack.extend(x.children)
+    for x in order:
+        total = total + _node_cost(x, binding)
+    return total
+
+
+def apply_update_cost(view_shape: Tuple[int, int], rank: int) -> Cost:
+    """Cost of ``M += U Vᵀ`` (the rank-k GER): 2·k·n·m FLOPs, M touched twice."""
+    n, m = view_shape
+    return Cost(2.0 * rank * n * m, ELT * (2 * n * m + rank * (n + m)))
+
+
+def dense_delta_cost(d: DenseDelta, binding: Dict[str, int]) -> Cost:
+    return expr_cost(d.value, binding)
+
+
+# ---------------------------------------------------------------------------
+# asymptotic (Table 2) reports — used for docs/EXPERIMENTS, not decisions
+# ---------------------------------------------------------------------------
+
+TABLE2 = {
+    # (family, strategy, model) -> human-readable complexity
+    ("powers", "reeval", "linear"): "n^γ·k",
+    ("powers", "reeval", "exp"): "n^γ·log k",
+    ("powers", "reeval", "skip"): "n^γ·(log s + k/s)",
+    ("powers", "incr", "linear"): "n²·k²",
+    ("powers", "incr", "exp"): "n²·k",
+    ("powers", "incr", "skip"): "n²·k²/s",
+    ("general", "reeval", "linear"): "p·n²·k",
+    ("general", "reeval", "exp"): "(n^γ + p·n²)·log k",
+    ("general", "incr", "linear"): "(n² + p·n)·k²",
+    ("general", "incr", "exp"): "(n² + p·n)·k",
+    ("general", "hybrid", "linear"): "p·n²·k",
+    ("general", "hybrid", "exp"): "p·n²·log k + n²·k",
+    ("general", "hybrid", "skip"): "p·n²·(log s + k/s) + n²·s",
+}

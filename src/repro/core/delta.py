@@ -1,0 +1,177 @@
+"""Delta derivation (paper §4.1) over the symbolic IR.
+
+``derive(E, env)`` computes the total delta of ``E`` under *simultaneous*
+factored updates of the variables named in ``env``.  The product rule
+
+    Δ(E1·E2) = ΔE1·E2 + E1·ΔE2 + ΔE1·ΔE2
+
+is exact for simultaneous multi-variable updates when ``ΔEi`` is the total
+delta of ``Ei`` — the paper's sequential multi-update rule (Example 4.5)
+expands to the same expression, so a single recursive pass suffices.
+
+All variables in the produced expressions denote *pre-update* values, which
+matches trigger semantics: every factor block is evaluated first, the
+``+=`` updates are applied last (Alg. 1 / Example 4.6).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Optional
+
+from . import expr as ex
+from .expr import Expr
+from .factored import (DeltaRep, DenseDelta, LowRank, lowrank_add,
+                       lowrank_inverse_woodbury, lowrank_matmul)
+
+
+@dataclass
+class DeltaEnv:
+    """Maps var name → its delta representation.
+
+    ``views`` maps an expression (by interned id) to the Var materializing
+    it — the inverse rule needs the *old value* of ``E⁻¹`` and may only be
+    applied when that inverse is materialized as a view (the compiler's
+    auxiliary-view pass guarantees this).
+    """
+
+    deltas: Dict[str, DeltaRep] = field(default_factory=dict)
+    views: Dict[int, Expr] = field(default_factory=dict)
+    sequential_sm: bool = False  # paper-faithful rank-1 SM chain vs Woodbury
+
+    def delta_of(self, name: str) -> Optional[DeltaRep]:
+        return self.deltas.get(name)
+
+    def view_for(self, e: Expr) -> Optional[Expr]:
+        return self.views.get(id(e))
+
+
+def is_static(e: Expr, env: DeltaEnv) -> bool:
+    """True if no variable of ``e`` has a registered delta."""
+    return not any(v in env.deltas for v in e.free_vars())
+
+
+def derive(e: Expr, env: DeltaEnv) -> DeltaRep:
+    """Total delta of ``e`` under the updates in ``env``."""
+    d = _derive(e, env, {})
+    return d
+
+
+def _derive(e: Expr, env: DeltaEnv, cache: Dict[int, DeltaRep]) -> DeltaRep:
+    hit = cache.get(id(e))
+    if hit is not None:
+        return hit
+    out = _derive_impl(e, env, cache)
+    cache[id(e)] = out
+    return out
+
+
+def _derive_impl(e: Expr, env: DeltaEnv, cache) -> DeltaRep:
+    if isinstance(e, ex.Var):
+        d = env.delta_of(e.name)
+        return d if d is not None else LowRank.zero()
+
+    if isinstance(e, (ex.Zero, ex.Identity, ex.Const)):
+        return LowRank.zero()
+
+    if isinstance(e, ex.Add):
+        parts = [_derive(t, env, cache) for t in e.terms]
+        if any(isinstance(p, DenseDelta) for p in parts):
+            vals = [_as_dense(p, t.shape) for p, t in zip(parts, e.terms)]
+            return DenseDelta(ex.add(*vals))
+        return lowrank_add(*parts)
+
+    if isinstance(e, ex.Scale):
+        if not is_static(e.factor, env):
+            # scalar factor with its own delta: treat as (1×1) product rule
+            return _derive_scalar_product(e, env, cache)
+        d = _derive(e.operand, env, cache)
+        return d.scale(e.factor) if not d.is_zero() else d
+
+    if isinstance(e, ex.Transpose):
+        d = _derive(e.operand, env, cache)
+        return d.transpose() if not d.is_zero() else d
+
+    if isinstance(e, ex.MatMul):
+        d1 = _derive(e.lhs, env, cache)
+        d2 = _derive(e.rhs, env, cache)
+        if d1.is_zero() and d2.is_zero():
+            return LowRank.zero()
+        if isinstance(d1, DenseDelta) or isinstance(d2, DenseDelta):
+            return _dense_matmul_rule(e, d1, d2)
+        return lowrank_matmul(d1, e.lhs, d2, e.rhs)
+
+    if isinstance(e, ex.Inverse):
+        d = _derive(e.operand, env, cache)
+        if d.is_zero():
+            return LowRank.zero()
+        view = env.view_for(e)
+        if view is None:
+            raise IncrementalInverseError(
+                f"inverse {e!r} is affected by updates but not materialized "
+                f"as a view; run the auxiliary-view pass first")
+        if isinstance(d, DenseDelta):
+            # no factored structure to exploit: Δ(E⁻¹) = (E+ΔE)⁻¹ − E⁻¹
+            new_op = ex.add(e.operand, d.value)
+            return DenseDelta(ex.sub(ex.inverse(new_op), view))
+        return lowrank_inverse_woodbury(view, d, sequential=env.sequential_sm)
+
+    raise TypeError(f"no delta rule for {type(e).__name__}")
+
+
+class IncrementalInverseError(RuntimeError):
+    pass
+
+
+def _as_dense(d: DeltaRep, shape) -> Expr:
+    if isinstance(d, DenseDelta):
+        return d.value
+    if d.is_zero():
+        return ex.zero(shape)
+    return d.to_expr()
+
+
+def _dense_matmul_rule(e: ex.MatMul, d1: DeltaRep, d2: DeltaRep) -> DenseDelta:
+    """Hybrid product rule: keep the result as one matrix, but evaluate any
+    factored operand in its cheap (skinny-first) association."""
+    terms = []
+    if not d1.is_zero():
+        if isinstance(d1, LowRank):
+            # (P1 Q1ᵀ) E2  →  P1 (E2ᵀ Q1)ᵀ — still O(k·n²)
+            terms.extend(ex.matmul(l, ex.transpose(ex.matmul(ex.transpose(e.rhs), r)))
+                         for l, r in zip(d1.left, d1.right))
+        else:
+            terms.append(ex.matmul(d1.value, e.rhs))
+    if not d2.is_zero():
+        if isinstance(d2, LowRank):
+            terms.extend(ex.matmul(ex.matmul(e.lhs, l), ex.transpose(r))
+                         for l, r in zip(d2.left, d2.right))
+        else:
+            terms.append(ex.matmul(e.lhs, d2.value))
+    if not d1.is_zero() and not d2.is_zero():
+        a = _as_dense(d1, e.lhs.shape)
+        b = _as_dense(d2, e.rhs.shape)
+        terms.append(ex.matmul(a, b))
+    return DenseDelta(ex.add(*terms))
+
+
+def _derive_scalar_product(e: ex.Scale, env: DeltaEnv, cache) -> DeltaRep:
+    """Δ(λ·E) when the scalar λ itself changes: product rule on (1×1)·E.
+
+    λ is (1,1) so Δλ is rank ≤ 1; the result stays factored if ΔE does.
+    """
+    dl = _derive(e.factor, env, cache)
+    dE = _derive(e.operand, env, cache)
+    lam = e.factor
+    terms = []
+    # Δλ · E  — dense rank equal to rank(E); represent dense
+    if not dl.is_zero():
+        dl_expr = _as_dense(dl, (1, 1))
+        terms.append(ex.scale(dl_expr, e.operand))
+        if not dE.is_zero():
+            terms.append(ex.scale(dl_expr, _as_dense(dE, e.operand.shape)))
+    if not dE.is_zero():
+        terms.append(ex.scale(lam, _as_dense(dE, e.operand.shape)))
+    if not terms:
+        return LowRank.zero()
+    return DenseDelta(ex.add(*terms))

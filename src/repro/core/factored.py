@@ -1,0 +1,300 @@
+"""Factored delta representation (paper §4.2, §4.3).
+
+A delta matrix is maintained as a sum of outer products of *blocks*,
+``ΔM = Σ_i  L_i · R_iᵀ`` where each ``L_i`` is ``(n × k_i)`` and each
+``R_i`` is ``(m × k_i)``.  Equivalently ``ΔM = P Qᵀ`` for the horizontal
+stacks ``P = [L_1 … L_b]``, ``Q = [R_1 … R_b]`` — the paper's block-matrix
+form.  Ranks ``k_i`` are static Python ints, so every staged computation
+has static shapes.
+
+``DenseDelta`` is the paper's *hybrid* representation (§5.3): the delta is
+kept as a single (possibly full-rank) matrix expression.  The cost model
+decides which representation each statement uses.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+from . import expr as ex
+from .expr import Expr, Shape
+
+
+def _block_rank(e: Expr) -> int:
+    k = e.shape[1]
+    if not isinstance(k, int):
+        raise ex.ShapeError(f"factored block must have static rank, got {e.shape}")
+    return k
+
+
+@dataclass(frozen=True)
+class LowRank:
+    """Factored delta ``Σ_i left[i] @ right[i].T`` (rank = Σ_i k_i)."""
+
+    left: Tuple[Expr, ...]
+    right: Tuple[Expr, ...]
+
+    def __post_init__(self):
+        assert len(self.left) == len(self.right)
+        for l, r in zip(self.left, self.right):
+            if _block_rank(l) != _block_rank(r):
+                raise ex.ShapeError(
+                    f"block rank mismatch: {l.shape} vs {r.shape}")
+
+    @property
+    def rank(self) -> int:
+        return sum(_block_rank(l) for l in self.left)
+
+    @property
+    def shape(self) -> Shape:
+        if not self.left:
+            raise ValueError("rank-0 delta has no shape; use LowRank.zero_like")
+        return (self.left[0].shape[0], self.right[0].shape[0])
+
+    def is_zero(self) -> bool:
+        return not self.left
+
+    def transpose(self) -> "LowRank":
+        return LowRank(self.right, self.left)
+
+    def scale(self, factor) -> "LowRank":
+        return LowRank(tuple(ex.scale(factor, l) for l in self.left), self.right)
+
+    def to_expr(self) -> Expr:
+        """The dense expression ``Σ L_i R_iᵀ`` (used by the hybrid path)."""
+        if self.is_zero():
+            raise ValueError("rank-0 delta")
+        return ex.add(*[ex.matmul(l, ex.transpose(r)) for l, r in
+                        zip(self.left, self.right)])
+
+    @staticmethod
+    def zero() -> "LowRank":
+        return LowRank((), ())
+
+    @staticmethod
+    def outer(u: Expr, v: Expr) -> "LowRank":
+        """Single-block factored delta ``u vᵀ``."""
+        return LowRank((u,), (v,))
+
+
+@dataclass(frozen=True)
+class DenseDelta:
+    """Hybrid representation: the delta as one matrix expression."""
+
+    value: Expr
+
+    @property
+    def shape(self) -> Shape:
+        return self.value.shape
+
+    def is_zero(self) -> bool:
+        return self.value.is_zero()
+
+    def transpose(self) -> "DenseDelta":
+        return DenseDelta(ex.transpose(self.value))
+
+    def scale(self, factor) -> "DenseDelta":
+        return DenseDelta(ex.scale(factor, self.value))
+
+
+DeltaRep = Union[LowRank, DenseDelta]
+
+
+def combine_blocks(blocks: Sequence[Tuple[Expr, Expr]]) -> LowRank:
+    """Common-factor extraction (§4.3).
+
+    Given monomial outer products ``Σ l_i r_iᵀ``, group terms that share a
+    right block and sum their left sides (then symmetrically group by left
+    block).  With the hash-consed IR, "shares a factor" is pointer equality.
+    This is the syntactic factoring the paper uses: it does not guarantee
+    minimal rank (that would need value inspection) but reproduces the
+    paper's 2×-per-squaring growth instead of 3×.
+    """
+    # group by right factor
+    by_right: Dict[int, Tuple[Expr, List[Expr]]] = {}
+    order: List[int] = []
+    for l, r in blocks:
+        key = id(r)
+        if key not in by_right:
+            by_right[key] = (r, [])
+            order.append(key)
+        by_right[key][1].append(l)
+    stage1: List[Tuple[Expr, Expr]] = []
+    for key in order:
+        r, ls = by_right[key]
+        stage1.append((ex.add(*ls) if len(ls) > 1 else ls[0], r))
+    # group by left factor
+    by_left: Dict[int, Tuple[Expr, List[Expr]]] = {}
+    order = []
+    for l, r in stage1:
+        key = id(l)
+        if key not in by_left:
+            by_left[key] = (l, [])
+            order.append(key)
+        by_left[key][1].append(r)
+    left: List[Expr] = []
+    right: List[Expr] = []
+    for key in order:
+        l, rs = by_left[key]
+        left.append(l)
+        right.append(ex.add(*rs) if len(rs) > 1 else rs[0])
+    return LowRank(tuple(left), tuple(right))
+
+
+def lowrank_matmul(d1: LowRank, e1: Expr, d2: LowRank, e2: Expr) -> LowRank:
+    """Product rule for factored deltas (§4.1 + §4.3 factoring):
+
+    ``Δ(E1·E2) = ΔE1·E2 + E1·ΔE2 + ΔE1·ΔE2`` with ``ΔE1 = P1 Q1ᵀ``,
+    ``ΔE2 = P2 Q2ᵀ`` becomes, grouped by common factors,
+
+        left  = [P1,  E1·P2 + P1·(Q1ᵀ P2)]
+        right = [E2ᵀ·Q1,  Q2]
+
+    which is exactly the paper's Example 4.6 shape: rank k1 + k2, every new
+    product is (big × skinny) or (skinny × skinny) — O(k n²) work.
+    """
+    blocks: List[Tuple[Expr, Expr]] = []
+    # (ΔE1) E2  →  P1 (E2ᵀ Q1)ᵀ
+    for l, r in zip(d1.left, d1.right):
+        blocks.append((l, ex.matmul(ex.transpose(e2), r)))
+    # E1 (ΔE2)  →  (E1 P2) Q2ᵀ
+    for l, r in zip(d2.left, d2.right):
+        blocks.append((ex.matmul(e1, l), r))
+    # (ΔE1)(ΔE2)  →  (P1 (Q1ᵀ P2)) Q2ᵀ   — k×k inner products stay tiny
+    for l1, r1 in zip(d1.left, d1.right):
+        for l2, r2 in zip(d2.left, d2.right):
+            blocks.append((ex.matmul(l1, ex.matmul(ex.transpose(r1), l2)), r2))
+    return combine_blocks(blocks)
+
+
+def lowrank_add(*deltas: LowRank) -> LowRank:
+    blocks: List[Tuple[Expr, Expr]] = []
+    for d in deltas:
+        blocks.extend(zip(d.left, d.right))
+    return combine_blocks(blocks)
+
+
+def lowrank_inverse_woodbury(view: Expr, d: LowRank,
+                             sequential: bool = False) -> LowRank:
+    """Incremental inverse under a factored update (Sherman–Morrison /
+    Woodbury, §4.1).
+
+    For ``W = E⁻¹`` (materialized, pre-update) and ``ΔE = P Qᵀ`` (rank k):
+
+        Δ(E⁻¹) = −W P (I_k + Qᵀ W P)⁻¹ Qᵀ W
+                = L Rᵀ,   L = −W P (I_k + Qᵀ W P)⁻¹,  R = Wᵀ Q
+
+    The only inversion is k×k.  With ``sequential=True`` the paper-faithful
+    Example 4.3 path is produced instead: k successive rank-1
+    Sherman–Morrison applications (same result, more statements).
+    """
+    if d.is_zero():
+        return LowRank.zero()
+    if sequential:
+        return _sherman_morrison_chain(view, d)
+    # stack blocks: P = [L_1 … L_b]  — symbolically a single block if b == 1,
+    # otherwise we keep per-block structure by concatenating via hstack expr.
+    P = _hstack(d.left)
+    Q = _hstack(d.right)
+    k = sum(_block_rank(l) for l in d.left)
+    WP = ex.matmul(view, P)
+    cap = ex.add(ex.identity(k), ex.matmul(ex.transpose(Q), WP))  # k×k
+    L = ex.scale(-1.0, ex.matmul(WP, ex.inverse(cap)))
+    R = ex.matmul(ex.transpose(view), Q)
+    return LowRank((L,), (R,))
+
+
+def _sherman_morrison_chain(view: Expr, d: LowRank) -> LowRank:
+    """Example 4.3: apply rank-1 Sherman–Morrison per outer product in turn.
+
+    Each step must use the *current* inverse ``W + Σ previous deltas``; the
+    deltas are themselves rank-1 so the chain stays factored.  Blocks of
+    rank > 1 are split into rank-1 column slices first.
+    """
+    ones: List[Tuple[Expr, Expr]] = []
+    for l, r in zip(d.left, d.right):
+        k = _block_rank(l)
+        if k == 1:
+            ones.append((l, r))
+        else:
+            for j in range(k):
+                ones.append((ColSlice.make(l, j), ColSlice.make(r, j)))
+    d = LowRank(tuple(l for l, _ in ones), tuple(r for _, r in ones))
+    out_blocks: List[Tuple[Expr, Expr]] = []
+
+    def current_apply(x: Expr) -> Expr:
+        """(W + Σ l_j r_jᵀ) · x  evaluated factored."""
+        terms = [ex.matmul(view, x)]
+        for l, r in out_blocks:
+            terms.append(ex.matmul(l, ex.matmul(ex.transpose(r), x)))
+        return ex.add(*terms)
+
+    def current_apply_t(x: Expr) -> Expr:
+        """(W + Σ l_j r_jᵀ)ᵀ · x."""
+        terms = [ex.matmul(ex.transpose(view), x)]
+        for l, r in out_blocks:
+            terms.append(ex.matmul(r, ex.matmul(ex.transpose(l), x)))
+        return ex.add(*terms)
+
+    for u, v in zip(d.left, d.right):
+        if _block_rank(u) != 1:
+            raise ValueError("sequential Sherman–Morrison needs rank-1 blocks")
+        Wu = current_apply(u)                      # n×1
+        Wtv = current_apply_t(v)                   # n×1
+        denom = ex.add(ex.const(1.0), ex.matmul(ex.transpose(v), Wu))  # 1×1
+        L = ex.scale(-1.0, ex.matmul(Wu, ex.inverse(denom)))
+        out_blocks.append((L, Wtv))
+    return LowRank(tuple(l for l, _ in out_blocks),
+                   tuple(r for _, r in out_blocks))
+
+
+def _hstack(blocks: Sequence[Expr]) -> Expr:
+    if len(blocks) == 1:
+        return blocks[0]
+    return HStack.make(tuple(blocks))
+
+
+@dataclass(frozen=True, eq=False)
+class ColSlice(Expr):
+    """Column ``j`` of a block, as an (n, 1) matrix."""
+
+    operand: Expr
+    col: int
+
+    @staticmethod
+    def make(operand: Expr, col: int) -> "ColSlice":
+        node = ColSlice(operand, col)
+        object.__setattr__(node, "shape", (operand.shape[0], 1))
+        object.__setattr__(node, "children", (operand,))
+        return node
+
+    def __repr__(self) -> str:
+        return f"{self.operand!r}[:,{self.col}]"
+
+
+@dataclass(frozen=True, eq=False)
+class HStack(Expr):
+    """Horizontal concatenation of column blocks — the paper's block matrix.
+
+    Introduced only where a genuinely stacked operand is needed (Woodbury
+    capacitance); everywhere else blocks stay separate to avoid copies.
+    """
+
+    blocks: Tuple[Expr, ...]
+
+    @staticmethod
+    def make(blocks: Tuple[Expr, ...]) -> "HStack":
+        n = blocks[0].shape[0]
+        k = 0
+        for b in blocks:
+            if b.shape[0] != n:
+                raise ex.ShapeError("hstack row mismatch")
+            k += _block_rank(b)
+        node = HStack(blocks)
+        object.__setattr__(node, "shape", (n, k))
+        object.__setattr__(node, "children", tuple(blocks))
+        return node
+
+    def __repr__(self) -> str:
+        return "[" + " ".join(map(repr, self.blocks)) + "]"

@@ -1,0 +1,57 @@
+"""Numeric Sherman–Morrison / Woodbury primitives (paper §4.1).
+
+These are the runtime counterparts of the symbolic rules in
+``factored.lowrank_inverse_woodbury`` — used directly by apps that maintain
+inverses (OLS) and by tests as oracles.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def sherman_morrison(w: Array, u: Array, v: Array) -> Array:
+    """New inverse of ``E + u vᵀ`` given ``w = E⁻¹`` — O(n²), no inversion.
+
+    ``u``, ``v`` are (n,1) column vectors (or (n,) — reshaped).
+    """
+    u = u.reshape(-1, 1)
+    v = v.reshape(-1, 1)
+    wu = w @ u                       # n×1
+    vtw = v.T @ w                    # 1×n
+    denom = 1.0 + (vtw @ u)[0, 0]
+    return w - (wu @ vtw) / denom
+
+
+def sherman_morrison_delta(w: Array, u: Array, v: Array) -> Tuple[Array, Array]:
+    """Factored delta of the inverse: Δ(E⁻¹) = p qᵀ (paper §4.1)."""
+    u = u.reshape(-1, 1)
+    v = v.reshape(-1, 1)
+    wu = w @ u
+    wtv = w.T @ v
+    denom = 1.0 + (v.T @ wu)[0, 0]
+    return -wu / denom, wtv
+
+
+def woodbury(w: Array, p: Array, q: Array) -> Array:
+    """New inverse of ``E + P Qᵀ`` for rank-k P,Q given ``w = E⁻¹``.
+
+    (E + PQᵀ)⁻¹ = W − W P (I_k + Qᵀ W P)⁻¹ Qᵀ W — only a k×k inversion.
+    """
+    wp = w @ p                                       # n×k
+    cap = jnp.eye(p.shape[1], dtype=w.dtype) + q.T @ wp   # k×k
+    return w - wp @ jnp.linalg.solve(cap, q.T @ w)
+
+
+def woodbury_delta(w: Array, p: Array, q: Array) -> Tuple[Array, Array]:
+    """Factored delta (L, R) with Δ(E⁻¹) = L Rᵀ, rank k."""
+    wp = w @ p
+    cap = jnp.eye(p.shape[1], dtype=w.dtype) + q.T @ wp
+    l = -wp @ jnp.linalg.inv(cap)
+    r = w.T @ q
+    return l, r

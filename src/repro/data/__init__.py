@@ -1,0 +1,8 @@
+"""Data substrate: deterministic shard-aware synthetic pipelines and the
+update-stream generators used by the IVM benchmarks."""
+
+from .pipeline import TokenPipeline, make_batch_specs, synth_batch
+from .updates import UpdateStream, zipf_row_stream
+
+__all__ = ["TokenPipeline", "make_batch_specs", "synth_batch",
+           "UpdateStream", "zipf_row_stream"]

@@ -1,0 +1,60 @@
+"""Update-stream generators for the IVM workloads (paper §7).
+
+The paper's experiments drive a continuous stream of rank-1 row updates;
+Table 4 additionally skews *which* rows change using a Zipf distribution.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Iterator, Optional, Tuple
+
+import numpy as np
+
+
+@dataclass
+class UpdateStream:
+    """Stream of (u, v) factored updates to an (n × m) input matrix."""
+
+    n: int
+    m: int
+    rank: int = 1
+    scale: float = 0.1
+    seed: int = 0
+    zipf: Optional[float] = None     # row-selection skew (None = uniform)
+
+    def __iter__(self) -> Iterator[Tuple[np.ndarray, np.ndarray]]:
+        rng = np.random.default_rng(self.seed)
+        while True:
+            yield self.next_update(rng)
+
+    def next_update(self, rng) -> Tuple[np.ndarray, np.ndarray]:
+        u = np.zeros((self.n, self.rank), dtype=np.float32)
+        rows = self._rows(rng, self.rank)
+        u[rows, np.arange(self.rank)] = 1.0
+        v = (self.scale * rng.normal(size=(self.m, self.rank))
+             ).astype(np.float32)
+        return u, v
+
+    def _rows(self, rng, k: int) -> np.ndarray:
+        if self.zipf is None or self.zipf <= 0:
+            return rng.integers(0, self.n, size=k)
+        # Zipf over row indices, clipped into range (Table 4 workload)
+        r = rng.zipf(max(self.zipf, 1.01), size=k)
+        return np.minimum(r - 1, self.n - 1)
+
+    def batch(self, count: int) -> Tuple[np.ndarray, np.ndarray]:
+        """A batch of ``count`` rank-1 updates merged into rank-`count`
+        factors (the paper's batch-update experiment)."""
+        rng = np.random.default_rng(self.seed)
+        us, vs = [], []
+        for _ in range(count):
+            u, v = self.next_update(rng)
+            us.append(u)
+            vs.append(v)
+        return np.concatenate(us, axis=1), np.concatenate(vs, axis=1)
+
+
+def zipf_row_stream(n: int, m: int, zipf_factor: float, seed: int = 0
+                    ) -> UpdateStream:
+    return UpdateStream(n=n, m=m, zipf=zipf_factor, seed=seed)

@@ -1,0 +1,72 @@
+"""Pallas TPU kernel: fused dual tall-skinny matmul  ``(A·U, Aᵀ·V)``.
+
+Factored delta propagation (paper §4.3, Example 4.6) evaluates, for every
+squaring-style statement, *both* ``B·U`` and ``Bᵀ·V`` against the same big
+view B.  Done as two XLA matmuls, B is streamed from HBM twice; both are
+memory-bound (intensity ≈ k/2), so the second pass is pure waste.  This
+kernel reads each column panel of B once and feeds both products —
+halving HBM traffic for the dominant term of the trigger.
+
+Grid design (TPU revisit-safety): a 1-D grid over column panels of A.
+  * ``P = A·U`` accumulates into a single (n × k) output block whose index
+    map is constant — consecutive revisits, the standard reduction
+    pattern, allowed by the Mosaic pipeline.
+  * ``Q[j] = A_panelᵀ·V`` hits each (bn × k) output block exactly once.
+The column panel (n × bn) must fit VMEM; ``ops`` picks bn accordingly.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _dual_matmul_kernel(a_ref, u_ref, v_ref, p_ref, q_ref):
+    j = pl.program_id(0)
+    a = a_ref[...]                       # (n, bn) column panel
+    # Q_j = A_panelᵀ V  — written once
+    q_ref[...] = jnp.dot(a.T, v_ref[...], preferred_element_type=jnp.float32)
+    # P += A_panel U_j  — accumulated across the grid
+    pu = jnp.dot(a, u_ref[...], preferred_element_type=jnp.float32)
+
+    @pl.when(j == 0)
+    def _init():
+        p_ref[...] = pu
+
+    @pl.when(j != 0)
+    def _acc():
+        p_ref[...] = p_ref[...] + pu
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "interpret"))
+def dual_matmul_pallas(a: jax.Array, u: jax.Array, v: jax.Array,
+                       *, bn: int = 256, interpret: bool = True):
+    """Returns ``(a @ u, a.T @ v)``; a: (n, m), u: (m, k), v: (n, k)."""
+    n, m = a.shape
+    k = u.shape[1]
+    assert u.shape == (m, k) and v.shape == (n, k), (a.shape, u.shape, v.shape)
+    bn = min(bn, m)
+    if m % bn:
+        raise ValueError(f"m={m} not divisible by panel bn={bn}")
+    grid = (m // bn,)
+    return pl.pallas_call(
+        _dual_matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n, bn), lambda j: (0, j)),   # A column panel
+            pl.BlockSpec((bn, k), lambda j: (j, 0)),   # U panel
+            pl.BlockSpec((n, k), lambda j: (0, 0)),    # V (whole, k-skinny)
+        ],
+        out_specs=[
+            pl.BlockSpec((n, k), lambda j: (0, 0)),    # P (accumulated)
+            pl.BlockSpec((bn, k), lambda j: (j, 0)),   # Q panel
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, k), jnp.float32),
+            jax.ShapeDtypeStruct((m, k), jnp.float32),
+        ],
+        interpret=interpret,
+    )(a, u, v)

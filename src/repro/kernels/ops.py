@@ -1,0 +1,133 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Each wrapper:
+  * validates/normalizes shapes (padding ragged edges where needed),
+  * picks block sizes against a VMEM budget,
+  * runs the kernel in interpret mode on CPU (the container target) and
+    compiled mode on TPU (``interpret=None`` → auto by backend).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .dual_matmul import dual_matmul_pallas
+from .flash_attention import flash_attention_pallas
+from .flash_decode import flash_decode_pallas
+from .rank_update import rank_update_pallas
+
+VMEM_BUDGET = 12 * 1024 * 1024  # bytes we allow a kernel's working set
+
+
+def _interpret_default(interpret: Optional[bool]) -> bool:
+    if interpret is not None:
+        return interpret
+    return jax.default_backend() != "tpu"
+
+
+def _pick_block(n: int, cap: int, align: int = 8) -> int:
+    """Largest divisor of n that is ≤ cap, preferring multiples of align."""
+    best = 1
+    for b in range(1, min(n, cap) + 1):
+        if n % b == 0 and (b % align == 0 or b == n or b < align):
+            best = b
+    return best
+
+
+def rank_update(m: jax.Array, u: jax.Array, v: jax.Array,
+                interpret: Optional[bool] = None) -> jax.Array:
+    """``m + u @ v.T`` — in-place rank-k view update (trigger apply step)."""
+    n, p = m.shape
+    k = u.shape[1]
+    # block choice: tile bytes = 4*(bm*bn + k*(bm+bn)) ≤ budget
+    bm = _pick_block(n, 512)
+    bn = _pick_block(p, 512)
+    while 4 * (bm * bn + k * (bm + bn)) > VMEM_BUDGET and (bm > 8 or bn > 8):
+        bm = max(8, bm // 2) if bm >= bn else bm
+        bn = max(8, bn // 2) if bn > bm else bn
+    if n % bm or p % bn:
+        return ref.rank_update(m, u, v)  # ragged fallback
+    return rank_update_pallas(m, u, v, bm=bm, bn=bn,
+                              interpret=_interpret_default(interpret))
+
+
+def dual_matmul(a: jax.Array, u: jax.Array, v: jax.Array,
+                interpret: Optional[bool] = None
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Fused ``(a @ u, a.T @ v)`` — one HBM pass over ``a``."""
+    n, m = a.shape
+    k = u.shape[1]
+    bn = _pick_block(m, 512)
+    # panel bytes = 4*(n*bn + n*k + bn*k + n*k)
+    while 4 * n * (bn + 2 * k) > VMEM_BUDGET and bn > 8:
+        bn = max(8, bn // 2)
+    if m % bn:
+        return ref.dual_matmul(a, u, v)
+    return dual_matmul_pallas(a, u, v, bn=bn,
+                              interpret=_interpret_default(interpret))
+
+
+def sherman_morrison_delta(w: jax.Array, u: jax.Array, v: jax.Array,
+                           interpret: Optional[bool] = None
+                           ) -> Tuple[jax.Array, jax.Array]:
+    """Fused Sherman–Morrison factored delta (paper §4.1) built on the
+    dual-matmul kernel: one pass over W produces both W·u and Wᵀ·v."""
+    u = u.reshape(-1, 1)
+    v = v.reshape(-1, 1)
+    wu, wtv = dual_matmul(w, u, v, interpret=interpret)
+    denom = 1.0 + (v.T @ wu)[0, 0]
+    return -wu / denom, wtv
+
+
+def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array,
+                 length: Optional[jax.Array] = None, chunk: int = 512,
+                 interpret: Optional[bool] = None) -> jax.Array:
+    """Single-token GQA decode attention over a cache.
+
+    q: (h, d); k, v: (s, h_kv, d).  vmaps the per-kv-head kernel across
+    the GQA groups.  Returns (h, d).
+    """
+    h, d = q.shape
+    s, h_kv, _ = k.shape
+    group = h // h_kv
+    if length is None:
+        length = jnp.asarray(s, dtype=jnp.int32)
+    qg = q.reshape(h_kv, group, d)
+    kt = k.transpose(1, 0, 2)  # (h_kv, s, d)
+    vt = v.transpose(1, 0, 2)
+    interp = _interpret_default(interpret)
+    chunk = min(chunk, s)
+    while s % chunk:
+        chunk -= 1
+
+    def per_head(qh, kh, vh):
+        acc, m, l = flash_decode_pallas(qh, kh, vh, length, chunk=chunk,
+                                        interpret=interp)
+        return acc / l
+
+    out = jax.vmap(per_head)(qg, kt, vt)  # (h_kv, g, d)
+    return out.reshape(h, d)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    causal: bool = True, bq: int = 256, bk: int = 256,
+                    interpret: Optional[bool] = None) -> jax.Array:
+    """Fused multi-head flash attention (training/prefill hot path).
+
+    q: (b, s, h, hd); k/v: (b, s, h, hd) — expand GQA before calling.
+    vmaps the per-(batch, head) kernel.
+    """
+    interp = _interpret_default(interpret)
+
+    def per_bh(qh, kh, vh):
+        return flash_attention_pallas(qh, kh, vh, bq=bq, bk=bk,
+                                      causal=causal, interpret=interp)
+
+    # outer vmap over heads (axis 2), inner over batch (axis 0)
+    bh = jax.vmap(jax.vmap(per_bh), in_axes=2, out_axes=2)
+    return bh(q, k, v)

@@ -1,0 +1,64 @@
+"""Pallas TPU kernel: rank-k view update  ``M += U Vᵀ``  (the trigger hot loop).
+
+Every LINVIEW trigger ends in one rank-k GER per maintained view (paper
+Alg. 1's ``+=`` statements).  With k ≪ n the op is memory-bound
+(arithmetic intensity ≈ k/6 FLOP/byte in f32), so the kernel's job is to
+stream M through VMEM exactly once at full HBM bandwidth while the MXU
+computes the (bm × k) @ (k × bn) tile products.
+
+TPU adaptation (vs the paper's BLAS GER):
+  * M is tiled (bm × bn), both multiples of the (8, 128) f32 VREG tile and
+    128-aligned for the MXU; U/V tiles live in VMEM across a whole row /
+    column of the grid (they are k-skinny, so their footprint is tiny).
+  * the update is done in place via input/output aliasing — M is read and
+    written once, the roofline optimum for this op.
+  * rank k is padded to the lane width (128) by ``ops.rank_update`` when
+    it pays off on the MXU; the kernel itself takes any static k.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEFAULT_BLOCK = (256, 256)
+
+
+def _rank_update_kernel(m_ref, u_ref, v_ref, o_ref):
+    # one (bm, bn) tile of M; U tile (bm, k); V tile (bn, k).
+    # accumulate in f32 on the MXU, store back in the view dtype.
+    upd = jnp.dot(u_ref[...], v_ref[...].T,
+                  preferred_element_type=jnp.float32)
+    o_ref[...] = (m_ref[...].astype(jnp.float32) + upd).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret"))
+def rank_update_pallas(m: jax.Array, u: jax.Array, v: jax.Array,
+                       *, bm: int = DEFAULT_BLOCK[0], bn: int = DEFAULT_BLOCK[1],
+                       interpret: bool = True) -> jax.Array:
+    """``m + u @ v.T`` with m: (n, p), u: (n, k), v: (p, k)."""
+    n, p = m.shape
+    k = u.shape[1]
+    assert u.shape == (n, k) and v.shape == (p, k), (m.shape, u.shape, v.shape)
+    bm = min(bm, n)
+    bn = min(bn, p)
+    if n % bm or p % bn:
+        raise ValueError(f"shape ({n},{p}) not divisible by block ({bm},{bn})")
+    grid = (n // bm, p // bn)
+    return pl.pallas_call(
+        _rank_update_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),   # M tile
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),    # U row-panel
+            pl.BlockSpec((bn, k), lambda i, j: (j, 0)),    # V row-panel
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, p), m.dtype),
+        input_output_aliases={0: 0},                        # in-place on M
+        interpret=interpret,
+    )(m, u, v)

@@ -1,0 +1,253 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+512 placeholder CPU devices stand in for 2 pods × 256 chips.  Nothing is
+allocated: params/optimizer/caches enter as ShapeDtypeStructs, the cell is
+``jit(step).lower(...).compile()``, and the proof artifacts are
+``compiled.memory_analysis()`` (fits per chip) and ``cost_analysis()`` +
+the parsed collective schedule (roofline terms, EXPERIMENTS.md §Roofline).
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen1.5-32b --shape train_4k
+  python -m repro.launch.dryrun --all            # every runnable cell
+  python -m repro.launch.dryrun --all --mesh multi
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCHS, SHAPES, get_config, shape_applicable
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.data.pipeline import make_batch_specs
+from repro.dist.sharding import (ShardingCtx, named_sharding, resolve_spec,
+                                 tree_shardings, use_sharding)
+from repro.launch.mesh import make_production_mesh
+from repro.models.model import LM, build_model
+from repro.roofline.analysis import (analyze_compiled, model_bytes_estimate,
+                                     model_flops_estimate)
+from repro.serve.engine import make_prefill_step, make_serve_step
+from repro.train.optimizer import OptState
+from repro.train.train_step import TrainState, make_train_step
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+
+def _spec_tree(axes_tree, shapes_tree, ctx):
+    return tree_shardings(axes_tree, shapes_tree, ctx)
+
+
+def _abstract(tree):
+    return jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                        tree)
+
+
+def _dryrun_config(cfg: ModelConfig, overrides: Optional[Dict] = None
+                   ) -> ModelConfig:
+    """Dry-run defaults: full remat (activation fit at pod scale)."""
+    base = dataclasses.replace(cfg, remat="full")
+    if overrides:
+        base = dataclasses.replace(base, **overrides)
+    return base
+
+
+def build_cell(arch: str, shape_name: str, multi_pod: bool,
+               overrides: Optional[Dict] = None,
+               rules: Optional[Dict] = None,
+               microbatches: int = 1):
+    """Returns (lowered, ctx, meta) for one cell."""
+    cfg = _dryrun_config(get_config(arch), overrides)
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        raise SkipCell(why)
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = int(np.prod(mesh.devices.shape))
+    model = build_model(cfg)
+    rng = jax.random.PRNGKey(0)
+
+    with use_sharding(mesh, rules=rules) as ctx:
+        param_shapes = jax.eval_shape(model.init, rng)
+        param_axes = model.param_axes()
+        param_sh = _spec_tree(param_axes, param_shapes, ctx)
+        rep = named_sharding((), None, ctx)
+
+        if shape.kind == "train":
+            step_fn = make_train_step(model, microbatches=microbatches)
+            opt_shapes = OptState(
+                step=jax.ShapeDtypeStruct((), jnp.int32),
+                master=jax.tree.map(
+                    lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32),
+                    param_shapes),
+                m=jax.tree.map(
+                    lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32),
+                    param_shapes),
+                v=jax.tree.map(
+                    lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32),
+                    param_shapes))
+            opt_sh = OptState(step=rep,
+                              master=_spec_tree(param_axes, opt_shapes.master,
+                                                ctx),
+                              m=_spec_tree(param_axes, opt_shapes.m, ctx),
+                              v=_spec_tree(param_axes, opt_shapes.v, ctx))
+            state_shapes = TrainState(
+                params=param_shapes, opt=opt_shapes,
+                rng=jax.ShapeDtypeStruct((2,), jnp.uint32))
+            state_sh = TrainState(params=param_sh, opt=opt_sh, rng=rep)
+            batch_shapes = make_batch_specs(cfg, shape)
+            batch_sh = {
+                k: named_sharding(("batch",) + (None,) * (len(v.shape) - 1),
+                                  v.shape, ctx)
+                for k, v in batch_shapes.items()}
+            jitted = jax.jit(step_fn, in_shardings=(state_sh, batch_sh),
+                             out_shardings=(state_sh, None),
+                             donate_argnums=(0,))
+            lowered = jitted.lower(state_shapes, batch_shapes)
+
+        elif shape.kind == "prefill":
+            step_fn = make_prefill_step(model)
+            batch_shapes = make_batch_specs(cfg, shape)
+            batch_sh = {
+                k: named_sharding(("batch",) + (None,) * (len(v.shape) - 1),
+                                  v.shape, ctx)
+                for k, v in batch_shapes.items()}
+            jitted = jax.jit(step_fn, in_shardings=(param_sh, batch_sh))
+            lowered = jitted.lower(param_shapes, batch_shapes)
+
+        else:  # decode
+            long_ctx = shape.seq_len > 100_000
+            step_fn = make_serve_step(model)
+            cache_shapes = jax.eval_shape(
+                lambda: model.init_cache(shape.global_batch, shape.seq_len,
+                                         long_context=long_ctx))
+            cache_axes = model.cache_axes(long_context=long_ctx)
+            cache_sh = _spec_tree(cache_axes, cache_shapes, ctx)
+            token_sh = named_sharding(("batch", None),
+                                      (shape.global_batch, 1), ctx)
+            token_shape = jax.ShapeDtypeStruct((shape.global_batch, 1),
+                                               jnp.int32)
+            pos_shape = jax.ShapeDtypeStruct((), jnp.int32)
+            jitted = jax.jit(step_fn,
+                             in_shardings=(param_sh, cache_sh, token_sh, rep),
+                             out_shardings=(None, cache_sh),
+                             donate_argnums=(1,))
+            lowered = jitted.lower(param_shapes, cache_shapes, token_shape,
+                                   pos_shape)
+
+    meta = {"arch": arch, "shape": shape_name,
+            "mesh": "2x16x16" if multi_pod else "16x16", "chips": chips,
+            "params": cfg.param_count(),
+            "active_params": cfg.active_param_count(),
+            "model_flops": model_flops_estimate(cfg, shape),
+            "model_bytes": model_bytes_estimate(cfg, shape),
+            "bf16": cfg.dtype == "bfloat16"}
+    return lowered, meta
+
+
+class SkipCell(Exception):
+    pass
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             force: bool = False, overrides: Optional[Dict] = None,
+             rules: Optional[Dict] = None, tag: str = "baseline",
+             microbatches: int = 1, verbose: bool = True) -> Dict:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    key = f"{arch}__{shape_name}__{mesh_name}__{tag}".replace("/", "_")
+    out_path = os.path.join(RESULTS_DIR, key + ".json")
+    if os.path.exists(out_path) and not force:
+        with open(out_path) as f:
+            return json.load(f)
+
+    t0 = time.time()
+    try:
+        lowered, meta = build_cell(arch, shape_name, multi_pod,
+                                   overrides=overrides, rules=rules,
+                                   microbatches=microbatches)
+    except SkipCell as e:
+        result = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                  "tag": tag, "status": "skipped", "reason": str(e)}
+        with open(out_path, "w") as f:
+            json.dump(result, f, indent=1)
+        if verbose:
+            print(f"[dryrun] SKIP {key}: {e}", flush=True)
+        return result
+
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+
+    report = analyze_compiled(
+        compiled, arch=arch, shape=shape_name, mesh_name=mesh_name,
+        chips=meta["chips"], model_flops=meta["model_flops"],
+        model_bytes=meta["model_bytes"], bf16_model=meta["bf16"])
+    mem = compiled.memory_analysis()
+    result = {**meta, "tag": tag, "status": "ok",
+              "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+              "memory_analysis": report.memory_per_chip,
+              "roofline": report.to_dict()}
+    with open(out_path, "w") as f:
+        json.dump(result, f, indent=1)
+    if verbose:
+        print(f"[dryrun] OK {key}: compile {t_compile:.0f}s | "
+              f"mem/chip arg={report.memory_per_chip['argument_bytes']/2**30:.2f}GiB "
+              f"temp={report.memory_per_chip['temp_bytes']/2**30:.2f}GiB | "
+              f"T(comp/mem/coll)={report.t_compute*1e3:.1f}/"
+              f"{report.t_memory*1e3:.1f}/{report.t_collective*1e3:.1f} ms | "
+              f"bottleneck={report.bottleneck} "
+              f"frac={report.roofline_fraction:.2f} "
+              f"bwfrac={report.bandwidth_fraction:.2f}", flush=True)
+        print(f"         memory_analysis: {mem}", flush=True)
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", type=str, default=None)
+    ap.add_argument("--shape", type=str, default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--tag", type=str, default="baseline")
+    args = ap.parse_args()
+
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    cells = []
+    archs = sorted(ARCHS) if (args.all or not args.arch) else [args.arch]
+    shapes = sorted(SHAPES) if (args.all or not args.shape) else [args.shape]
+    for a in archs:
+        for s in shapes:
+            for mp in meshes:
+                cells.append((a, s, mp))
+
+    failures = []
+    for a, s, mp in cells:
+        try:
+            run_cell(a, s, mp, force=args.force, tag=args.tag)
+        except Exception as e:
+            traceback.print_exc()
+            failures.append((a, s, mp, str(e)))
+    if failures:
+        print(f"[dryrun] {len(failures)} FAILURES:")
+        for f in failures:
+            print("  ", f)
+        raise SystemExit(1)
+    print(f"[dryrun] all {len(cells)} cells done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,25 @@
+"""Production mesh construction.
+
+A function, not a module constant: importing this module never touches
+jax device state (device count is locked at first backend init, and smoke
+tests must see 1 CPU device while the dry-run sees 512 placeholders).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 single-pod (256 chips) or 2×16×16 multi-pod (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(model_parallel: int = 1, axis_names=("data", "model")):
+    """Whatever devices exist, data-major — used by tests/examples."""
+    n = len(jax.devices())
+    if n % model_parallel:
+        raise ValueError(f"{n} devices % model={model_parallel}")
+    return jax.make_mesh((n // model_parallel, model_parallel), axis_names)

@@ -1,0 +1,152 @@
+"""Training driver: data pipeline → train_step → checkpoints → fault
+tolerance, on whatever mesh the host provides.
+
+  PYTHONPATH=src python -m repro.launch.train --arch h2o-danube-1.8b \
+      --reduced --steps 100 --batch 8 --seq 128
+
+On a pod this is the per-host entrypoint: the mesh comes from
+``make_production_mesh`` (or ``plan_mesh`` after an elastic resize), the
+pipeline shards by host id, and the supervisor drives restart logic.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import time
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.data.pipeline import TokenPipeline, synth_batch
+from repro.dist.checkpoint import CheckpointManager
+from repro.dist.sharding import use_sharding
+from repro.launch.mesh import make_local_mesh
+from repro.models import build_model
+from repro.train import grad_compression as gc
+from repro.train.train_step import (TrainState, init_train_state,
+                                    make_train_step)
+
+
+def custom_100m() -> ModelConfig:
+    """The ~100M end-to-end example config (llama-style dense)."""
+    return ModelConfig(
+        name="custom-100m", family="dense", n_layers=12, d_model=768,
+        n_heads=12, n_kv_heads=4, d_ff=2048, vocab=32000, head_dim=64,
+        mlp_gated=True, dtype="float32", fsdp=False, remat="none",
+        source="example")
+
+
+def custom_10m() -> ModelConfig:
+    """CPU-friendly variant for the checked-in convergence demo."""
+    return ModelConfig(
+        name="custom-10m", family="dense", n_layers=4, d_model=256,
+        n_heads=4, n_kv_heads=4, d_ff=768, vocab=8192, head_dim=64,
+        mlp_gated=True, dtype="float32", fsdp=False, remat="none",
+        source="example")
+
+
+def resolve_config(args) -> ModelConfig:
+    if args.arch == "custom-100m":
+        return custom_100m()
+    if args.arch == "custom-10m":
+        return custom_10m()
+    cfg = get_config(args.arch)
+    return cfg.reduced() if args.reduced else cfg
+
+
+def train(cfg: ModelConfig, *, steps: int, batch: int, seq: int,
+          lr: float = 3e-4, seed: int = 0, ckpt_dir: Optional[str] = None,
+          save_every: int = 100, compression_rank: int = 0,
+          mesh=None, log_every: int = 10, resume: bool = True) -> Dict:
+    model = build_model(cfg)
+    shape = ShapeConfig("train", seq, batch, "train")
+    state = init_train_state(model, jax.random.PRNGKey(seed))
+    comp = (gc.init_compression(state.params, rank=compression_rank)
+            if compression_rank else None)
+    step_fn = make_train_step(model, lr=lr, warmup=min(50, steps // 10 + 1),
+                              total_steps=steps, compression=comp)
+    step_fn = jax.jit(step_fn, donate_argnums=(0,))
+
+    mgr = CheckpointManager(ckpt_dir, async_save=True) if ckpt_dir else None
+    start = 0
+    if mgr and resume and mgr.latest_step() is not None:
+        start = mgr.latest_step()
+        state = mgr.restore(state, step=start)
+        print(f"[train] resumed from step {start}")
+
+    ctx = use_sharding(mesh) if mesh is not None else _null_ctx()
+    history = []
+    with ctx:
+        t_last = time.perf_counter()
+        for t in range(start, steps):
+            batch_np = synth_batch(cfg, shape, seed=seed, step=t)
+            state, metrics = step_fn(state,
+                                     {k: jnp.asarray(v)
+                                      for k, v in batch_np.items()})
+            if (t + 1) % log_every == 0 or t == steps - 1:
+                loss = float(metrics["loss"])
+                dt = (time.perf_counter() - t_last) / log_every
+                t_last = time.perf_counter()
+                tok_s = batch * seq / dt
+                print(f"[train] step {t+1:5d} loss {loss:7.4f} "
+                      f"lr {float(metrics['lr']):.2e} "
+                      f"gnorm {float(metrics['grad_norm']):7.3f} "
+                      f"{dt*1e3:7.1f} ms/step {tok_s:9.0f} tok/s",
+                      flush=True)
+                history.append({"step": t + 1, "loss": loss,
+                                "ms_per_step": dt * 1e3})
+            if mgr and (t + 1) % save_every == 0:
+                mgr.save(t + 1, state)
+        if mgr:
+            mgr.save(steps, state, blocking=True)
+    return {"history": history, "final_loss": history[-1]["loss"]
+            if history else None}
+
+
+class _null_ctx:
+    def __enter__(self):
+        return None
+
+    def __exit__(self, *a):
+        return False
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="custom-10m")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--save-every", type=int, default=100)
+    ap.add_argument("--compression-rank", type=int, default=0)
+    ap.add_argument("--mesh", choices=["none", "local"], default="none")
+    ap.add_argument("--model-parallel", type=int, default=1)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    cfg = resolve_config(args)
+    mesh = (make_local_mesh(args.model_parallel)
+            if args.mesh == "local" else None)
+    print(f"[train] {cfg.name}: {cfg.param_count()/1e6:.1f}M params, "
+          f"{args.steps} steps, batch {args.batch}×{args.seq}")
+    result = train(cfg, steps=args.steps, batch=args.batch, seq=args.seq,
+                   lr=args.lr, ckpt_dir=args.ckpt_dir,
+                   save_every=args.save_every,
+                   compression_rank=args.compression_rank, mesh=mesh)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(result, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

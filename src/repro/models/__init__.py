@@ -1,0 +1,5 @@
+"""LM substrate: layers, attention, MoE, SSM/xLSTM blocks, model assembly."""
+
+from .model import LM, build_model
+
+__all__ = ["LM", "build_model"]

@@ -1,0 +1,270 @@
+"""GQA attention: blockwise (flash-style) training path + cached decode.
+
+The training/prefill path is a pure-JAX blockwise attention (lax.scan over
+KV chunks with online softmax) so the S=32k prefill never materializes an
+(S × S) logits tensor — the XLA analogue of the TPU flash kernel, chosen
+so the dry-run lowers with memory-sane buffers while cost_analysis still
+counts the true 4·B·H·S²·hd attention FLOPs.
+
+Masking variants (all folded into one predicate):
+  * causal          — decoder LMs
+  * sliding window  — h2o-danube (SWA)
+  * prefix-LM       — paligemma (bidirectional over the image prefix)
+  * none            — hubert encoder
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import shard
+from . import layers
+
+NEG_INF = -1e30
+
+
+def init_attention(cfg, dtype, rng) -> Dict:
+    d = cfg.d_model
+    hd = cfg.resolved_head_dim
+    h, kv = cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(rng, 4)
+    sd = d ** -0.5
+    p = {
+        "wq": (jax.random.normal(ks[0], (d, h * hd), jnp.float32) * sd).astype(dtype),
+        "wk": (jax.random.normal(ks[1], (d, kv * hd), jnp.float32) * sd).astype(dtype),
+        "wv": (jax.random.normal(ks[2], (d, kv * hd), jnp.float32) * sd).astype(dtype),
+        "wo": (jax.random.normal(ks[3], (h * hd, d), jnp.float32) *
+               (h * hd) ** -0.5).astype(dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * hd,), dtype)
+        p["bk"] = jnp.zeros((kv * hd,), dtype)
+        p["bv"] = jnp.zeros((kv * hd,), dtype)
+    return p
+
+
+def axes_attention(cfg) -> Dict:
+    p = {
+        "wq": ("fsdp", "heads"),
+        "wk": ("fsdp", "kv_heads"),
+        "wv": ("fsdp", "kv_heads"),
+        "wo": ("heads", "fsdp"),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = ("heads",)
+        p["bk"] = ("kv_heads",)
+        p["bv"] = ("kv_heads",)
+    return p
+
+
+def _project_qkv(params: Dict, cfg, x: jax.Array):
+    b, s, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = jnp.einsum("bsd,dh->bsh", x, params["wq"])
+    k = jnp.einsum("bsd,dh->bsh", x, params["wk"])
+    v = jnp.einsum("bsd,dh->bsh", x, params["wv"])
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(q.dtype)
+        k = k + params["bk"].astype(k.dtype)
+        v = v + params["bv"].astype(v.dtype)
+    q = q.reshape(b, s, cfg.n_heads, hd)
+    k = k.reshape(b, s, cfg.n_kv_heads, hd)
+    v = v.reshape(b, s, cfg.n_kv_heads, hd)
+    q = shard(q, "batch", None, "heads", None)
+    k = shard(k, "batch", None, "kv_heads", None)
+    v = shard(v, "batch", None, "kv_heads", None)
+    return q, k, v
+
+
+def _mask_block(q_pos: jax.Array, k_pos: jax.Array, *, causal: bool,
+                window: Optional[int], prefix_len: int) -> jax.Array:
+    """(qc, kc) boolean keep-mask for a block of query/key positions."""
+    qp = q_pos[:, None]
+    kp = k_pos[None, :]
+    if not causal:
+        keep = jnp.ones((q_pos.shape[0], k_pos.shape[0]), dtype=bool)
+    else:
+        keep = kp <= qp
+        if prefix_len > 0:
+            keep = keep | ((qp < prefix_len) & (kp < prefix_len))
+    if window is not None:
+        keep = keep & (kp > qp - window)
+    return keep
+
+
+def blockwise_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True, window: Optional[int] = None,
+                        prefix_len: int = 0, q_chunk: int = 512,
+                        kv_chunk: int = 1024,
+                        base_pos: int = 0) -> jax.Array:
+    """Flash-style attention. q: (B,S,H,hd); k/v: (B,S,KV,hd) → (B,S,H,hd).
+
+    GQA folded via reshape to (KV, group). Accumulation in f32.
+    """
+    b, s, h, hd = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    q_chunk = min(q_chunk, s)
+    while s % q_chunk:
+        q_chunk -= 1
+    kv_chunk = min(kv_chunk, s)
+    while s % kv_chunk:
+        kv_chunk -= 1
+    nq, nk = s // q_chunk, s // kv_chunk
+    scale = hd ** -0.5
+
+    # GQA: expand KV to the full query-head count BEFORE the attention
+    # einsums.  This keeps the head dimension shardable at H-way TP even
+    # when kv_heads < mesh width (command-r: 8 kv heads on model=16) —
+    # reshaping q to (kvh, group) instead would force GSPMD to replicate
+    # the whole attention (measured: the baseline sweep's worst cells).
+    if g > 1:
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+    k = shard(k, "batch", None, "heads", None)
+    v = shard(v, "batch", None, "heads", None)
+
+    qg = q.reshape(b, nq, q_chunk, h, hd)
+    kc = k.reshape(b, nk, kv_chunk, h, hd)
+    vc = v.reshape(b, nk, kv_chunk, h, hd)
+
+    def one_q_chunk(qi, q_blk):
+        # q_blk: (b, q_chunk, h, hd)
+        q_pos = base_pos + qi * q_chunk + jnp.arange(q_chunk)
+
+        def inner(carry, inputs):
+            acc, m, l = carry
+            ki, k_blk, v_blk = inputs
+            k_pos = base_pos + ki * kv_chunk + jnp.arange(kv_chunk)
+            # f32 accumulation WITHOUT materializing f32 copies of q/k/v:
+            # the baseline's .astype(f32) on the chunks doubled attention
+            # HBM traffic (measured — EXPERIMENTS.md §Perf iteration 1).
+            logits = jnp.einsum("bqhd,bshd->bqhs", q_blk, k_blk,
+                                preferred_element_type=jnp.float32) * scale
+            keep = _mask_block(q_pos, k_pos, causal=causal, window=window,
+                               prefix_len=prefix_len)
+            logits = jnp.where(keep[None, :, None, :], logits, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(logits, axis=-1))
+            p = jnp.exp(logits - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bqhs,bshd->bqhd", p.astype(v_blk.dtype), v_blk,
+                            preferred_element_type=jnp.float32)
+            acc_new = acc * alpha[..., None] + pv
+            return (acc_new, m_new, l_new), None
+
+        acc0 = jnp.zeros((b, q_chunk, h, hd), jnp.float32)
+        m0 = jnp.full((b, q_chunk, h), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, q_chunk, h), jnp.float32)
+        ks_idx = jnp.arange(nk)
+        (acc, m, l), _ = jax.lax.scan(
+            inner, (acc0, m0, l0),
+            (ks_idx, jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0)))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return out
+
+    outs = jax.lax.map(lambda args: one_q_chunk(*args),
+                       (jnp.arange(nq), jnp.moveaxis(qg, 1, 0)))
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, s, h, hd)
+    return out.astype(q.dtype)
+
+
+def attention_block(params: Dict, cfg, x: jax.Array, positions: jax.Array,
+                    *, causal: bool = True, prefix_len: int = 0,
+                    return_kv: bool = False):
+    """Full-sequence attention (train/prefill): x (B,S,D) → (B,S,D).
+
+    ``return_kv=True`` additionally returns the rope'd (k, v) pair so a
+    batched prefill can populate the decode cache in one pass.
+    """
+    hd = cfg.resolved_head_dim
+    q, k, v = _project_qkv(params, cfg, x)
+    cos, sin = layers.rope_angles(positions, hd, cfg.rope_theta)
+    q = layers.apply_rope(q, cos, sin)
+    k = layers.apply_rope(k, cos, sin)
+    out = blockwise_attention(q, k, v, causal=causal,
+                              window=cfg.sliding_window,
+                              prefix_len=prefix_len)
+    out = out.reshape(x.shape[0], x.shape[1], -1)
+    out = jnp.einsum("bsh,hd->bsd", out, params["wo"])
+    out = shard(out, "batch", None, None)
+    if return_kv:
+        return out, (k, v)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# decode path (one token, KV cache)
+# ---------------------------------------------------------------------------
+
+
+def init_kv_cache(cfg, batch: int, max_seq: int, dtype) -> Dict:
+    hd = cfg.resolved_head_dim
+    window = cfg.sliding_window
+    cache_len = min(max_seq, window) if window else max_seq
+    shape = (batch, cache_len, cfg.n_kv_heads, hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def axes_kv_cache(long_context: bool = False) -> Dict:
+    # sequence-sharded cache (flash-decode SP over the model axis): the
+    # kv-head count is too small to shard on wide meshes, and the
+    # baseline showed GSPMD inventing full-cache gathers when heads led
+    # the layout (EXPERIMENTS.md §Perf).  One spec covers decode_32k
+    # (seq→model) and long_500k (batch=1 ⇒ seq→data+model).
+    return {"k": ("batch", "cache_seq", None, None),
+            "v": ("batch", "cache_seq", None, None)}
+
+
+def decode_attention(params: Dict, cfg, x: jax.Array, cache: Dict,
+                     pos: jax.Array) -> Tuple[jax.Array, Dict]:
+    """One-token decode. x: (B,1,D); cache k/v: (B,L,KV,hd); pos: scalar.
+
+    Sliding-window archs store a ring buffer of window size; full-attention
+    archs store the whole context.  Returns (out (B,1,D), new cache).
+    """
+    b = x.shape[0]
+    hd = cfg.resolved_head_dim
+    kvh = cfg.n_kv_heads
+    g = cfg.n_heads // kvh
+    q, k, v = _project_qkv(params, cfg, x)        # (B,1,H/KV,hd)
+    cos, sin = layers.rope_angles(pos[None], hd, cfg.rope_theta)
+    q = layers.apply_rope(q, cos, sin)
+    k = layers.apply_rope(k, cos, sin)
+
+    cache_len = cache["k"].shape[1]
+    if cfg.sliding_window is not None:
+        slot = pos % cache_len                   # ring buffer
+        n_valid = jnp.minimum(pos + 1, cache_len)
+    else:
+        slot = pos
+        n_valid = pos + 1
+    k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot, axis=1)
+    k_cache = shard(k_cache, "batch", "cache_seq", None, None)
+    v_cache = shard(v_cache, "batch", "cache_seq", None, None)
+
+    # Flash-decode over the sequence-sharded cache: each shard computes
+    # partial logits/PV over its cache slice; GSPMD's softmax decomposition
+    # inserts only tiny (B,H)-sized ARs per layer.  Two measured rules
+    # (EXPERIMENTS.md §Perf iterations 1–3):
+    #   * never cast the cache — an .astype(f32) materialized a full-cache
+    #     f32 copy per step (50 GB on qwen3-moe decode_32k);
+    #   * keep the GQA GROUPED einsum — heads are unsharded here (the
+    #     model axis holds the sequence), so expanding KV to n_heads would
+    #     materialize a g× cache copy for no parallelism gain.
+    qf = q.reshape(b, kvh, g, hd)
+    logits = jnp.einsum("bkgd,bskd->bkgs", qf, k_cache,
+                        preferred_element_type=jnp.float32) * (hd ** -0.5)
+    idx = jnp.arange(cache_len)[None, None, None, :]
+    logits = jnp.where(idx < n_valid, logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    out = out.reshape(b, 1, cfg.n_heads * hd).astype(x.dtype)
+    out = jnp.einsum("bsh,hd->bsd", out, params["wo"])
+    return shard(out, "batch", None, None), {"k": k_cache, "v": v_cache}

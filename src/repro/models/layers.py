@@ -1,0 +1,153 @@
+"""Core layers: norms, embeddings, RoPE, MLPs.
+
+Pure functions over explicit param dicts.  Every ``init_*`` has a matching
+``axes_*`` returning the same pytree structure with logical-axis tuples
+(consumed by repro.dist.sharding for pjit in/out shardings).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import shard
+
+
+def _dtype(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[name]
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+
+def init_rmsnorm(d: int, dtype) -> Dict:
+    return {"scale": jnp.ones((d,), dtype=dtype)}
+
+
+def axes_rmsnorm() -> Dict:
+    return {"scale": (None,)}
+
+
+def rmsnorm(params: Dict, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / LM head
+# ---------------------------------------------------------------------------
+
+
+def init_embedding(vocab: int, d: int, dtype, rng) -> Dict:
+    emb = jax.random.normal(rng, (vocab, d), dtype=jnp.float32) * (d ** -0.5)
+    return {"table": emb.astype(dtype)}
+
+
+def axes_embedding() -> Dict:
+    return {"table": ("vocab", "fsdp")}
+
+
+def embed(params: Dict, tokens: jax.Array) -> jax.Array:
+    out = jnp.take(params["table"], tokens, axis=0)
+    return shard(out, "batch", None, None)
+
+
+def unembed(params: Dict, x: jax.Array) -> jax.Array:
+    """Logits: (B, S, D) @ (V, D)ᵀ → (B, S, V), f32 for the softmax."""
+    logits = jnp.einsum("bsd,vd->bsv", x, params["table"],
+                        preferred_element_type=jnp.float32)
+    return shard(logits, "batch", None, "vocab")
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embedding
+# ---------------------------------------------------------------------------
+
+
+def rope_angles(positions: jax.Array, head_dim: int,
+                theta: float) -> Tuple[jax.Array, jax.Array]:
+    """positions: (...,) int32 → (cos, sin) with shape (..., head_dim//2)."""
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: (B, S, H, hd); cos/sin: (B, S, hd//2) or (S, hd//2)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    if cos.ndim == 2:
+        cos = cos[None, :, None, :]
+        sin = sin[None, :, None, :]
+    else:
+        cos = cos[:, :, None, :]
+        sin = sin[:, :, None, :]
+    dt = x.dtype
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [x1f * cos - x2f * sin, x2f * cos + x1f * sin], axis=-1).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU / plain GeLU)
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(d: int, d_ff: int, gated: bool, dtype, rng) -> Dict:
+    k1, k2, k3 = jax.random.split(rng, 3)
+    sd_in = d ** -0.5
+    sd_out = d_ff ** -0.5
+    p = {
+        "w_in": (jax.random.normal(k1, (d, d_ff), jnp.float32) * sd_in).astype(dtype),
+        "w_out": (jax.random.normal(k2, (d_ff, d), jnp.float32) * sd_out).astype(dtype),
+    }
+    if gated:
+        p["w_gate"] = (jax.random.normal(k3, (d, d_ff), jnp.float32) * sd_in).astype(dtype)
+    return p
+
+
+def axes_mlp(gated: bool) -> Dict:
+    p = {"w_in": ("fsdp", "ff"), "w_out": ("ff", "fsdp")}
+    if gated:
+        p["w_gate"] = ("fsdp", "ff")
+    return p
+
+
+def mlp(params: Dict, x: jax.Array, gated: bool) -> jax.Array:
+    h = jnp.einsum("bsd,df->bsf", x, params["w_in"])
+    h = shard(h, "batch", None, "ff")
+    if gated:
+        g = jnp.einsum("bsd,df->bsf", x, params["w_gate"])
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(h.dtype) * h
+    else:
+        h = jax.nn.gelu(h.astype(jnp.float32)).astype(h.dtype)
+    out = jnp.einsum("bsf,fd->bsd", h, params["w_out"])
+    return shard(out, "batch", None, None)
+
+
+# ---------------------------------------------------------------------------
+# Linear frontend projectors (VLM patch / audio frame stubs)
+# ---------------------------------------------------------------------------
+
+
+def init_frontend_proj(in_dim: int, d: int, dtype, rng) -> Dict:
+    w = jax.random.normal(rng, (in_dim, d), jnp.float32) * (in_dim ** -0.5)
+    return {"w": w.astype(dtype), "b": jnp.zeros((d,), dtype)}
+
+
+def axes_frontend_proj() -> Dict:
+    return {"w": (None, "fsdp"), "b": (None,)}
+
+
+def frontend_proj(params: Dict, x: jax.Array) -> jax.Array:
+    return (jnp.einsum("bse,ed->bsd", x, params["w"]) +
+            params["b"].astype(x.dtype))

@@ -1,0 +1,540 @@
+"""LM assembly: one :class:`LM` covering all 10 assigned architectures.
+
+Families:
+  dense / moe          — pre-norm transformer stack (scan over layers)
+  hybrid (zamba2)      — Mamba2 backbone + ONE weight-shared attn+MLP block
+                         applied every ``attn_every`` layers
+  ssm (xlstm)          — [mLSTM × k, sLSTM] groups
+  vlm (paligemma)      — patch-embedding prefix (stub frontend) + prefix-LM
+  audio (hubert)       — encoder-only, frame-embedding stub + masked CE
+
+Everything is scanned with stacked per-layer params so the 94-layer MoE
+dry-run lowers to compact HLO, and blocks are jax.checkpoint'd according
+to ``cfg.remat``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.ad_checkpoint import checkpoint_name as _checkpoint_name
+
+from repro.configs.base import ModelConfig
+from repro.dist.sharding import shard
+from . import attention, layers, moe as moe_lib, ssm, xlstm
+
+
+Params = Dict[str, Any]
+
+
+def _dtype(cfg: ModelConfig):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[cfg.dtype]
+
+
+def _stack_init(init_fn, rng, n: int):
+    """Initialize n copies of a sub-module with stacked leaves."""
+    rngs = jax.random.split(rng, n)
+    return jax.vmap(init_fn)(rngs)
+
+
+def _stack_axes(axes: Dict) -> Dict:
+    """Prepend a layer axis (None — layers are never sharded) to every leaf."""
+    return jax.tree.map(
+        lambda t: (None,) + t,
+        axes,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x))
+
+
+class LM:
+    """Config-driven model; all methods are pure (params passed in)."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.dtype = _dtype(cfg)
+
+    # ------------------------------------------------------------------ init
+    def init(self, rng: jax.Array) -> Params:
+        cfg = self.cfg
+        dt = self.dtype
+        r = jax.random.split(rng, 8)
+        p: Params = {"embed": layers.init_embedding(cfg.vocab, cfg.d_model,
+                                                    dt, r[0])}
+        p["final_norm"] = layers.init_rmsnorm(cfg.d_model, dt)
+        if not cfg.tie_embeddings:
+            p["lm_head"] = layers.init_embedding(cfg.vocab, cfg.d_model,
+                                                 dt, r[1])
+        if cfg.frontend_dim:
+            p["frontend"] = layers.init_frontend_proj(cfg.frontend_dim,
+                                                      cfg.d_model, dt, r[2])
+        fam = cfg.family
+        if fam in ("dense", "moe", "vlm", "audio"):
+            p["blocks"] = _stack_init(
+                lambda k: self._init_transformer_block(k), r[3], cfg.n_layers)
+        elif fam == "hybrid":
+            groups, tail = self._zamba_layout()
+            p["mamba_groups"] = _stack_init(
+                lambda k: _stack_init(
+                    lambda k2: self._init_mamba_block(k2), k, cfg.attn_every),
+                r[3], groups)
+            if tail:
+                p["mamba_tail"] = _stack_init(
+                    lambda k: self._init_mamba_block(k), r[4], tail)
+            p["shared_attn"] = self._init_transformer_block(r[5])
+        elif fam == "ssm":
+            n_groups, per = self._xlstm_layout()
+            p["mlstm_groups"] = _stack_init(
+                lambda k: _stack_init(
+                    lambda k2: self._init_mlstm_block(k2), k, per), r[3],
+                n_groups)
+            p["slstm"] = _stack_init(
+                lambda k: self._init_slstm_block(k), r[4], n_groups)
+        else:
+            raise ValueError(f"unknown family {fam}")
+        return p
+
+    def param_axes(self) -> Params:
+        cfg = self.cfg
+        p: Params = {"embed": layers.axes_embedding(),
+                     "final_norm": layers.axes_rmsnorm()}
+        if not cfg.tie_embeddings:
+            p["lm_head"] = layers.axes_embedding()
+        if cfg.frontend_dim:
+            p["frontend"] = layers.axes_frontend_proj()
+        fam = cfg.family
+        if fam in ("dense", "moe", "vlm", "audio"):
+            p["blocks"] = _stack_axes(self._axes_transformer_block())
+        elif fam == "hybrid":
+            groups, tail = self._zamba_layout()
+            p["mamba_groups"] = _stack_axes(_stack_axes(self._axes_mamba_block()))
+            if tail:
+                p["mamba_tail"] = _stack_axes(self._axes_mamba_block())
+            p["shared_attn"] = self._axes_transformer_block()
+        elif fam == "ssm":
+            p["mlstm_groups"] = _stack_axes(_stack_axes(self._axes_mlstm_block()))
+            p["slstm"] = _stack_axes(self._axes_slstm_block())
+        return p
+
+    # -- per-block init/axes --------------------------------------------------
+    def _init_transformer_block(self, rng) -> Params:
+        cfg, dt = self.cfg, self.dtype
+        r = jax.random.split(rng, 3)
+        p = {"ln1": layers.init_rmsnorm(cfg.d_model, dt),
+             "attn": attention.init_attention(cfg, dt, r[0]),
+             "ln2": layers.init_rmsnorm(cfg.d_model, dt)}
+        if cfg.moe is not None and cfg.family == "moe":
+            p["moe"] = moe_lib.init_moe(cfg, dt, r[1])
+        elif cfg.d_ff > 0:
+            p["mlp"] = layers.init_mlp(cfg.d_model, cfg.d_ff, cfg.mlp_gated,
+                                       dt, r[1])
+        return p
+
+    def _axes_transformer_block(self) -> Params:
+        cfg = self.cfg
+        p = {"ln1": layers.axes_rmsnorm(),
+             "attn": attention.axes_attention(cfg),
+             "ln2": layers.axes_rmsnorm()}
+        if cfg.moe is not None and cfg.family == "moe":
+            p["moe"] = moe_lib.axes_moe(cfg)
+        elif cfg.d_ff > 0:
+            p["mlp"] = layers.axes_mlp(cfg.mlp_gated)
+        return p
+
+    def _init_mamba_block(self, rng) -> Params:
+        cfg, dt = self.cfg, self.dtype
+        return {"ln": layers.init_rmsnorm(cfg.d_model, dt),
+                "mixer": ssm.init_mamba2(cfg, dt, rng)}
+
+    def _axes_mamba_block(self) -> Params:
+        return {"ln": layers.axes_rmsnorm(),
+                "mixer": ssm.axes_mamba2(self.cfg)}
+
+    def _init_mlstm_block(self, rng) -> Params:
+        cfg, dt = self.cfg, self.dtype
+        return {"ln": layers.init_rmsnorm(cfg.d_model, dt),
+                "mixer": xlstm.init_mlstm(cfg, dt, rng)}
+
+    def _axes_mlstm_block(self) -> Params:
+        return {"ln": layers.axes_rmsnorm(),
+                "mixer": xlstm.axes_mlstm(self.cfg)}
+
+    def _init_slstm_block(self, rng) -> Params:
+        cfg, dt = self.cfg, self.dtype
+        return {"ln": layers.init_rmsnorm(cfg.d_model, dt),
+                "cell": xlstm.init_slstm(cfg, dt, rng)}
+
+    def _axes_slstm_block(self) -> Params:
+        return {"ln": layers.axes_rmsnorm(),
+                "cell": xlstm.axes_slstm(self.cfg)}
+
+    # -- layouts ---------------------------------------------------------------
+    def _zamba_layout(self) -> Tuple[int, int]:
+        g = self.cfg.n_layers // self.cfg.attn_every
+        tail = self.cfg.n_layers - g * self.cfg.attn_every
+        return g, tail
+
+    def _xlstm_layout(self) -> Tuple[int, int]:
+        per = self.cfg.xlstm.mlstm_per_slstm
+        n_groups = self.cfg.n_layers // (per + 1)
+        return n_groups, per
+
+    # ------------------------------------------------------------- forward
+    def _maybe_remat(self, fn):
+        if self.cfg.remat == "none":
+            return fn
+        if self.cfg.remat == "attn":
+            # save attention outputs: the backward pass never re-runs the
+            # (memory-heavy) blockwise attention — §Perf iteration 4
+            policy = jax.checkpoint_policies.save_only_these_names(
+                "attn_out")
+        elif self.cfg.remat == "full":
+            policy = jax.checkpoint_policies.nothing_saveable
+        else:
+            policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        return jax.checkpoint(fn, policy=policy)
+
+    def backbone(self, params: Params, x: jax.Array, positions: jax.Array,
+                 *, causal: bool = True, prefix_len: int = 0
+                 ) -> Tuple[jax.Array, jax.Array]:
+        """(B,S,D) → (B,S,D); returns (hidden, aux_loss)."""
+        cfg = self.cfg
+        fam = cfg.family
+        aux0 = jnp.zeros((), jnp.float32)
+
+        if fam in ("dense", "moe", "vlm", "audio"):
+            def block(carry, bp):
+                h, aux = carry
+                # 'seq_sp' is () by default (no-op); the hillclimb enables
+                # Megatron-style sequence parallelism by mapping it to the
+                # model axis (norms/residual work sharded over seq).
+                h = shard(h, "batch", "seq_sp", None)
+                a = attention.attention_block(bp["attn"], cfg,
+                                              layers.rmsnorm(bp["ln1"], h,
+                                                             cfg.norm_eps),
+                                              positions, causal=causal,
+                                              prefix_len=prefix_len)
+                a = _checkpoint_name(a, "attn_out")
+                h = shard(h + a, "batch", "seq_sp", None)
+                hn = layers.rmsnorm(bp["ln2"], h, cfg.norm_eps)
+                if fam == "moe":
+                    f, a_loss = moe_lib.moe_block(bp["moe"], cfg, hn,
+                                                  return_aux=True)
+                    aux = aux + a_loss
+                else:
+                    f = layers.mlp(bp["mlp"], hn, cfg.mlp_gated)
+                return (h + f, aux), None
+
+            (x, aux), _ = jax.lax.scan(self._maybe_remat(block), (x, aux0),
+                                       params["blocks"])
+            return x, aux
+
+        if fam == "hybrid":
+            def mamba(carry, bp):
+                h = carry
+                m = ssm.mamba2_block(bp["mixer"], cfg,
+                                     layers.rmsnorm(bp["ln"], h, cfg.norm_eps))
+                return h + m, None
+
+            def shared_part(h, bp):
+                # weight-shared attention block (same params every group)
+                a = attention.attention_block(
+                    bp["attn"], cfg,
+                    layers.rmsnorm(bp["ln1"], h, cfg.norm_eps),
+                    positions, causal=causal)
+                h = h + a
+                f = layers.mlp(bp["mlp"],
+                               layers.rmsnorm(bp["ln2"], h, cfg.norm_eps),
+                               cfg.mlp_gated)
+                return h + f
+
+            def group(h, gp):
+                h, _ = jax.lax.scan(self._maybe_remat(mamba), h, gp)
+                return self._maybe_remat(shared_part)(h, params["shared_attn"]), None
+
+            x, _ = jax.lax.scan(group, x, params["mamba_groups"])
+            if "mamba_tail" in params:
+                x, _ = jax.lax.scan(self._maybe_remat(mamba), x,
+                                    params["mamba_tail"])
+            return x, aux0
+
+        if fam == "ssm":
+            def mblock(h, bp):
+                m = xlstm.mlstm_block(bp["mixer"], cfg,
+                                      layers.rmsnorm(bp["ln"], h, cfg.norm_eps))
+                return h + m, None
+
+            def slstm_part(h, sp):
+                s = xlstm.slstm_block(sp["cell"], cfg,
+                                      layers.rmsnorm(sp["ln"], h, cfg.norm_eps))
+                return h + s
+
+            def group(h, gp):
+                mg, sp = gp
+                h, _ = jax.lax.scan(self._maybe_remat(mblock), h, mg)
+                return self._maybe_remat(slstm_part)(h, sp), None
+
+            x, _ = jax.lax.scan(group, x,
+                                (params["mlstm_groups"], params["slstm"]))
+            return x, aux0
+
+        raise ValueError(fam)
+
+    def embed_inputs(self, params: Params, batch: Dict) -> Tuple[jax.Array,
+                                                                 jax.Array, int]:
+        """Batch dict → (embeddings (B,S,D), positions (S,), prefix_len)."""
+        cfg = self.cfg
+        if cfg.family == "vlm":
+            patches = layers.frontend_proj(params["frontend"],
+                                           batch["patches"].astype(self.dtype))
+            tok = layers.embed(params["embed"], batch["tokens"])
+            if cfg.tie_embeddings:
+                tok = tok * jnp.asarray(cfg.d_model ** 0.5, tok.dtype)
+            x = jnp.concatenate([patches, tok], axis=1)
+            prefix = patches.shape[1]
+        elif cfg.family == "audio":
+            x = layers.frontend_proj(params["frontend"],
+                                     batch["frames"].astype(self.dtype))
+            prefix = 0
+        else:
+            x = layers.embed(params["embed"], batch["tokens"])
+            prefix = 0
+        positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+        return shard(x, "batch", None, None), positions, prefix
+
+    def logits(self, params: Params, hidden: jax.Array) -> jax.Array:
+        head = params["embed"] if self.cfg.tie_embeddings else params["lm_head"]
+        return layers.unembed(head, hidden)
+
+    def forward(self, params: Params, batch: Dict) -> Tuple[jax.Array,
+                                                            jax.Array]:
+        """Full-sequence forward → (logits, aux_loss)."""
+        cfg = self.cfg
+        x, positions, prefix = self.embed_inputs(params, batch)
+        causal = not cfg.encoder_only
+        h, aux = self.backbone(params, x, positions, causal=causal,
+                               prefix_len=prefix)
+        h = layers.rmsnorm(params["final_norm"], h, cfg.norm_eps)
+        return self.logits(params, h), aux
+
+    # ------------------------------------------------------------------ loss
+    def loss(self, params: Params, batch: Dict) -> Tuple[jax.Array, Dict]:
+        cfg = self.cfg
+        logits, aux = self.forward(params, batch)
+        if cfg.family == "audio":
+            targets = batch["targets"]
+            mask = batch["mask"].astype(jnp.float32)
+            ce = _cross_entropy(logits, targets)
+            loss = jnp.sum(ce * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+        elif cfg.family == "vlm":
+            text_logits = logits[:, cfg.n_patches:, :]
+            tokens = batch["tokens"]
+            ce = _cross_entropy(text_logits[:, :-1], tokens[:, 1:])
+            loss = jnp.mean(ce)
+        else:
+            tokens = batch["tokens"]
+            ce = _cross_entropy(logits[:, :-1], tokens[:, 1:])
+            loss = jnp.mean(ce)
+        total = loss + aux
+        return total, {"ce": loss, "aux": aux}
+
+    # ---------------------------------------------------------------- decode
+    def init_cache(self, batch: int, max_seq: int,
+                   long_context: bool = False) -> Params:
+        cfg, dt = self.cfg, self.dtype
+        fam = cfg.family
+        if fam in ("dense", "moe", "vlm"):
+            one = attention.init_kv_cache(cfg, batch, max_seq, dt)
+            return {"kv": jax.tree.map(
+                lambda x: jnp.broadcast_to(x[None], (cfg.n_layers,) + x.shape),
+                one)}
+        if fam == "hybrid":
+            groups, tail = self._zamba_layout()
+            m_one = ssm.init_mamba2_state(cfg, batch, dt)
+            kv_one = attention.init_kv_cache(cfg, batch, max_seq, dt)
+            c = {"mamba": jax.tree.map(
+                lambda x: jnp.broadcast_to(
+                    x[None, None], (groups, cfg.attn_every) + x.shape), m_one),
+                "kv": jax.tree.map(
+                    lambda x: jnp.broadcast_to(x[None], (groups,) + x.shape),
+                    kv_one)}
+            if tail:
+                c["mamba_tail"] = jax.tree.map(
+                    lambda x: jnp.broadcast_to(x[None], (tail,) + x.shape),
+                    m_one)
+            return c
+        if fam == "ssm":
+            n_groups, per = self._xlstm_layout()
+            m_one = xlstm.init_mlstm_state(cfg, batch, dt)
+            s_one = xlstm.init_slstm_state(cfg, batch)
+            return {"mlstm": jax.tree.map(
+                lambda x: jnp.broadcast_to(
+                    x[None, None], (n_groups, per) + x.shape), m_one),
+                "slstm": jax.tree.map(
+                    lambda x: jnp.broadcast_to(x[None], (n_groups,) + x.shape),
+                    s_one)}
+        raise ValueError(f"no decode cache for family {fam}")
+
+    def cache_axes(self, long_context: bool = False) -> Params:
+        cfg = self.cfg
+        fam = cfg.family
+        kv_ax = _stack_axes(attention.axes_kv_cache(long_context))
+        if fam in ("dense", "moe", "vlm"):
+            return {"kv": kv_ax}
+        if fam == "hybrid":
+            groups, tail = self._zamba_layout()
+            c = {"mamba": _stack_axes(_stack_axes(ssm.axes_mamba2_state())),
+                 "kv": kv_ax}
+            if tail:
+                c["mamba_tail"] = _stack_axes(ssm.axes_mamba2_state())
+            return c
+        if fam == "ssm":
+            return {"mlstm": _stack_axes(_stack_axes(xlstm.axes_mlstm_state())),
+                    "slstm": _stack_axes(xlstm.axes_slstm_state())}
+        raise ValueError(fam)
+
+    def prefill(self, params: Params, batch: Dict, max_seq: int
+                ) -> Tuple[jax.Array, Params]:
+        """Batched prefill for transformer families: one full forward pass
+        that also populates the decode cache (bidirectional over a VLM
+        image prefix — which a token-by-token prefill cannot express).
+
+        Returns (logits (B,S,V), cache ready for decode at pos = S).
+        """
+        cfg = self.cfg
+        if cfg.family not in ("dense", "moe", "vlm"):
+            raise NotImplementedError(
+                f"batched prefill-with-cache for family {cfg.family} uses "
+                f"the recurrent decode path instead")
+        x, positions, prefix = self.embed_inputs(params, batch)
+        b, s, _ = x.shape
+        cache = self.init_cache(b, max_seq)
+        if cfg.sliding_window is not None and s > cache["kv"]["k"].shape[2]:
+            raise NotImplementedError(
+                "SWA ring-cache prefill beyond the window: decode the "
+                "overflow stepwise")
+        aux0 = jnp.zeros((), jnp.float32)
+
+        def block(carry, bp):
+            h, aux = carry
+            a, (k, v) = attention.attention_block(
+                bp["attn"], cfg,
+                layers.rmsnorm(bp["ln1"], h, cfg.norm_eps), positions,
+                causal=True, prefix_len=prefix, return_kv=True)
+            h = h + a
+            hn = layers.rmsnorm(bp["ln2"], h, cfg.norm_eps)
+            if cfg.family == "moe":
+                f = moe_lib.moe_block(bp["moe"], cfg, hn)
+            else:
+                f = layers.mlp(bp["mlp"], hn, cfg.mlp_gated)
+            return (h + f, aux), (k, v)
+
+        (x, _), (ks, vs) = jax.lax.scan(block, (x, aux0), params["blocks"])
+        # write the rope'd K/V prefix into the cache (ring-aware for SWA)
+        cache_len = cache["kv"]["k"].shape[2]
+        take = min(s, cache_len)
+        new_k = jax.lax.dynamic_update_slice_in_dim(
+            cache["kv"]["k"], ks[:, :, s - take:s], 0, axis=2)
+        new_v = jax.lax.dynamic_update_slice_in_dim(
+            cache["kv"]["v"], vs[:, :, s - take:s], 0, axis=2)
+        cache = {"kv": {"k": new_k, "v": new_v}}
+        x = layers.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        return self.logits(params, x), cache
+
+    def decode_step(self, params: Params, cache: Params, token: jax.Array,
+                    pos: jax.Array) -> Tuple[jax.Array, Params]:
+        """One decode step. token: (B,1) int32; pos: scalar int32.
+
+        Returns (logits (B,1,V), new cache).
+        """
+        cfg = self.cfg
+        x = layers.embed(params["embed"], token)
+        if cfg.family == "vlm" and cfg.tie_embeddings:
+            x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+        fam = cfg.family
+
+        if fam in ("dense", "moe", "vlm"):
+            def block(h, xs):
+                bp, kv = xs
+                a, kv = attention.decode_attention(
+                    bp["attn"], cfg,
+                    layers.rmsnorm(bp["ln1"], h, cfg.norm_eps), kv, pos)
+                h = h + a
+                hn = layers.rmsnorm(bp["ln2"], h, cfg.norm_eps)
+                if fam == "moe":
+                    f = moe_lib.moe_block(bp["moe"], cfg, hn)
+                else:
+                    f = layers.mlp(bp["mlp"], hn, cfg.mlp_gated)
+                return h + f, kv
+
+            x, new_kv = jax.lax.scan(block, x,
+                                     (params["blocks"], cache["kv"]))
+            new_cache = {"kv": new_kv}
+        elif fam == "hybrid":
+            def mamba(h, xs):
+                bp, st = xs
+                m, st = ssm.mamba2_decode_step(
+                    bp["mixer"], cfg,
+                    layers.rmsnorm(bp["ln"], h, cfg.norm_eps), st)
+                return h + m, st
+
+            def group(h, xs):
+                gp, m_st, kv = xs
+                h, m_st = jax.lax.scan(mamba, h, (gp, m_st))
+                bp = params["shared_attn"]
+                a, kv = attention.decode_attention(
+                    bp["attn"], cfg,
+                    layers.rmsnorm(bp["ln1"], h, cfg.norm_eps), kv, pos)
+                h = h + a
+                f = layers.mlp(bp["mlp"],
+                               layers.rmsnorm(bp["ln2"], h, cfg.norm_eps),
+                               cfg.mlp_gated)
+                return h + f, (m_st, kv)
+
+            x, (new_mamba, new_kv) = jax.lax.scan(
+                group, x, (params["mamba_groups"], cache["mamba"],
+                           cache["kv"]))
+            new_cache = {"mamba": new_mamba, "kv": new_kv}
+            if "mamba_tail" in params:
+                x, tail_st = jax.lax.scan(
+                    mamba, x, (params["mamba_tail"], cache["mamba_tail"]))
+                new_cache["mamba_tail"] = tail_st
+        elif fam == "ssm":
+            def mblock(h, xs):
+                bp, st = xs
+                m, st = xlstm.mlstm_decode_step(
+                    bp["mixer"], cfg,
+                    layers.rmsnorm(bp["ln"], h, cfg.norm_eps), st)
+                return h + m, st
+
+            def group(h, xs):
+                (mg, sp), m_st, s_st = xs
+                h, m_st = jax.lax.scan(mblock, h, (mg, m_st))
+                s, s_st = xlstm.slstm_decode_step(
+                    sp["cell"], cfg,
+                    layers.rmsnorm(sp["ln"], h, cfg.norm_eps), s_st)
+                return h + s, (m_st, s_st)
+
+            x, (new_m, new_s) = jax.lax.scan(
+                group, x, ((params["mlstm_groups"], params["slstm"]),
+                           cache["mlstm"], cache["slstm"]))
+            new_cache = {"mlstm": new_m, "slstm": new_s}
+        else:
+            raise ValueError(fam)
+
+        x = layers.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        return self.logits(params, x), new_cache
+
+
+def _cross_entropy(logits: jax.Array, targets: jax.Array) -> jax.Array:
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    true = jnp.take_along_axis(logits, targets[..., None],
+                               axis=-1)[..., 0]
+    return lse - true
+
+
+def build_model(cfg: ModelConfig) -> LM:
+    return LM(cfg)

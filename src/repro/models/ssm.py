@@ -1,0 +1,223 @@
+"""Mamba2 (SSD) block: chunkwise-parallel training, recurrent decode.
+
+The SSD inter-chunk recurrence  ``S_c = a_c·S_{c-1} + X_c``  is exactly the
+paper's general iterative form T_{i+1} = A·T_i + B (§5.3) with a scalar-
+per-head A — DESIGN.md §5 discusses how LINVIEW's iterative-model analysis
+transfers.  The chunkwise algorithm below is the standard quadratic-
+intra / linear-inter split (Mamba2 paper, Alg. 1), TPU-shaped: all
+intra-chunk work is batched einsums over (chunk × chunk) tiles that fit
+VMEM, and the inter-chunk state passing is a lax.scan of rank-N updates.
+
+Single B/C group (the assigned zamba2 config), heads share B/C.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import shard
+from . import layers
+
+
+def _dims(cfg):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.headdim
+    return d_inner, n_heads, s.headdim, s.state
+
+
+def init_mamba2(cfg, dtype, rng) -> Dict:
+    d = cfg.d_model
+    d_inner, h, p, n = _dims(cfg)
+    k = cfg.ssm.conv_kernel
+    ks = jax.random.split(rng, 4)
+    sd = d ** -0.5
+    proj_out = 2 * d_inner + 2 * n + h      # z, x, B, C, dt
+    return {
+        "in_proj": (jax.random.normal(ks[0], (d, proj_out), jnp.float32)
+                    * sd).astype(dtype),
+        "conv_w": (jax.random.normal(ks[1], (k, d_inner + 2 * n), jnp.float32)
+                   * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((d_inner + 2 * n,), dtype),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "a_log": jnp.zeros((h,), jnp.float32),          # A = -exp(a_log)
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "norm": layers.init_rmsnorm(d_inner, dtype),
+        "out_proj": (jax.random.normal(ks[2], (d_inner, d), jnp.float32)
+                     * d_inner ** -0.5).astype(dtype),
+    }
+
+
+def axes_mamba2(cfg) -> Dict:
+    return {
+        "in_proj": ("fsdp", "ff"),
+        "conv_w": (None, "ff"),
+        "conv_b": ("ff",),
+        "dt_bias": (None,),
+        "a_log": (None,),
+        "d_skip": (None,),
+        "norm": layers.axes_rmsnorm(),
+        "out_proj": ("ff", "fsdp"),
+    }
+
+
+def _split_proj(cfg, proj: jax.Array):
+    d_inner, h, p, n = _dims(cfg)
+    z = proj[..., :d_inner]
+    xbc = proj[..., d_inner:2 * d_inner + 2 * n]
+    dt = proj[..., 2 * d_inner + 2 * n:]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv over (B, S, C) with kernel (K, C)."""
+    k = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xbc.shape[1], :] * w[i][None, None, :]
+              for i in range(k))
+    return jax.nn.silu((out + b[None, None, :]).astype(jnp.float32)
+                       ).astype(xbc.dtype)
+
+
+def chunked_ssd(x: jax.Array, dt: jax.Array, a_log: jax.Array,
+                bmat: jax.Array, cmat: jax.Array, chunk: int,
+                init_state: jax.Array = None
+                ) -> Tuple[jax.Array, jax.Array]:
+    """SSD scan.  x: (B,S,H,P); dt: (B,S,H); bmat/cmat: (B,S,N).
+
+    Returns (y (B,S,H,P), final_state (B,H,N,P)).
+    """
+    bsz, s_orig, h, p = x.shape
+    n = bmat.shape[-1]
+    f32 = jnp.float32
+    # pad sequence to a chunk multiple (padded tail has dt=0 ⇒ no effect)
+    chunk = min(chunk, s_orig) if s_orig % chunk else chunk
+    pad = (-s_orig) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0)))
+    s = s_orig + pad
+    nc = s // chunk
+
+    la = (-jnp.exp(a_log)[None, None, :] * dt).astype(f32)     # log a (B,S,H)
+    xc = x.reshape(bsz, nc, chunk, h, p).astype(f32)
+    dtc = dt.reshape(bsz, nc, chunk, h).astype(f32)
+    lac = la.reshape(bsz, nc, chunk, h)
+    bc = bmat.reshape(bsz, nc, chunk, n).astype(f32)
+    cc = cmat.reshape(bsz, nc, chunk, n).astype(f32)
+
+    cum = jnp.cumsum(lac, axis=2)                              # LA (B,nc,L,H)
+    la_end = cum[:, :, -1, :]                                  # (B,nc,H)
+
+    # intra-chunk: scores[b,c,h,t,u] = (C_t·B_u)·exp(LA_t−LA_u)·dt_u, u ≤ t
+    g = jnp.einsum("bctn,bcun->bctu", cc, bc)                  # (B,nc,L,L)
+    decay = cum[:, :, :, None, :] - cum[:, :, None, :, :]      # (B,nc,t,u,H)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    w = jnp.where(tri[None, None, :, :, None], jnp.exp(decay), 0.0)
+    scores = g[..., None] * w * dtc[:, :, None, :, :]          # (B,nc,t,u,H)
+    y_intra = jnp.einsum("bctuh,bcuhp->bcthp", scores, xc)
+
+    # chunk state contributions: Sc[b,c,h,n,p]
+    wend = jnp.exp(la_end[:, :, None, :] - cum) * dtc          # (B,nc,L,H)
+    s_chunk = jnp.einsum("bcuh,bcun,bcuhp->bchnp", wend, bc, xc)
+
+    # inter-chunk scan: S ← exp(la_end)·S + s_chunk
+    def step(state, inp):
+        la_e, s_c = inp                                        # (B,H), (B,H,N,P)
+        y_state = state                                        # carry in
+        new = jnp.exp(la_e)[:, :, None, None] * y_state + s_c
+        return new, y_state                                    # emit pre-update
+
+    init = (jnp.zeros((bsz, h, n, p), f32) if init_state is None
+            else init_state.astype(f32))
+    final, s_prev = jax.lax.scan(
+        step, init,
+        (jnp.moveaxis(la_end, 1, 0), jnp.moveaxis(s_chunk, 1, 0)))
+    s_prev = jnp.moveaxis(s_prev, 0, 1)                        # (B,nc,H,N,P)
+
+    # inter-chunk outputs: y_inter[t] = exp(LA_t)·(C_t · S_prev)
+    y_inter = jnp.einsum("bctn,bchnp->bcthp", cc, s_prev) * \
+        jnp.exp(cum)[..., None]
+    y = (y_intra + y_inter).reshape(bsz, s, h, p)[:, :s_orig]
+    return y.astype(x.dtype), final
+
+
+def mamba2_block(params: Dict, cfg, x: jax.Array,
+                 state: Dict = None) -> jax.Array:
+    """Full-sequence Mamba2 mixer. x: (B,S,D) → (B,S,D)."""
+    b, s, d = x.shape
+    d_inner, h, p, n = _dims(cfg)
+    proj = jnp.einsum("bsd,de->bse", x, params["in_proj"])
+    proj = shard(proj, "batch", None, "ff")
+    z, xbc, dt_raw = _split_proj(cfg, proj)
+    xbc = _causal_conv(xbc, params["conv_w"], params["conv_b"])
+    xs = xbc[..., :d_inner].reshape(b, s, h, p)
+    bmat = xbc[..., d_inner:d_inner + n]
+    cmat = xbc[..., d_inner + n:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) +
+                         params["dt_bias"][None, None, :])
+    y, _ = chunked_ssd(xs, dt, params["a_log"], bmat, cmat, cfg.ssm.chunk)
+    y = y + (params["d_skip"][None, None, :, None] *
+             xs.astype(jnp.float32)).astype(y.dtype)
+    y = y.reshape(b, s, d_inner)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    y = layers.rmsnorm(params["norm"], y, cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, params["out_proj"])
+    return shard(out, "batch", None, None)
+
+
+# ---------------------------------------------------------------------------
+# decode (recurrent, O(1) per token)
+# ---------------------------------------------------------------------------
+
+
+def init_mamba2_state(cfg, batch: int, dtype) -> Dict:
+    d_inner, h, p, n = _dims(cfg)
+    k = cfg.ssm.conv_kernel
+    return {
+        "conv": jnp.zeros((batch, k - 1, d_inner + 2 * n), dtype),
+        "ssm": jnp.zeros((batch, h, n, p), jnp.float32),
+    }
+
+
+def axes_mamba2_state() -> Dict:
+    return {"conv": ("batch", None, "ff"),
+            "ssm": ("batch", None, None, None)}
+
+
+def mamba2_decode_step(params: Dict, cfg, x: jax.Array, state: Dict
+                       ) -> Tuple[jax.Array, Dict]:
+    """x: (B,1,D) → (B,1,D); state updated in O(d_inner·N) per token."""
+    b = x.shape[0]
+    d_inner, h, p, n = _dims(cfg)
+    proj = jnp.einsum("bsd,de->bse", x, params["in_proj"])
+    z, xbc, dt_raw = _split_proj(cfg, proj)
+
+    # conv ring: window = [conv_state, xbc_t]
+    win = jnp.concatenate([state["conv"], xbc], axis=1)        # (B,K,C)
+    w = params["conv_w"]
+    conv_out = jnp.einsum("bkc,kc->bc", win, w) + params["conv_b"]
+    conv_out = jax.nn.silu(conv_out.astype(jnp.float32)).astype(x.dtype)
+    new_conv = win[:, 1:, :]
+
+    xs = conv_out[:, :d_inner].reshape(b, h, p)
+    bvec = conv_out[:, d_inner:d_inner + n].astype(jnp.float32)
+    cvec = conv_out[:, d_inner + n:].astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw[:, 0, :].astype(jnp.float32) +
+                         params["dt_bias"][None, :])           # (B,H)
+    a = jnp.exp(-jnp.exp(params["a_log"])[None, :] * dt)       # (B,H)
+
+    s_new = (a[:, :, None, None] * state["ssm"] +
+             jnp.einsum("bh,bn,bhp->bhnp", dt, bvec, xs.astype(jnp.float32)))
+    y = jnp.einsum("bn,bhnp->bhp", cvec, s_new)
+    y = y + params["d_skip"][None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(b, 1, d_inner).astype(x.dtype)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    y = layers.rmsnorm(params["norm"], y, cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, params["out_proj"])
+    return out, {"conv": new_conv, "ssm": s_new}

@@ -1,0 +1,351 @@
+"""xLSTM blocks: mLSTM (matrix memory) and sLSTM (scalar memory).
+
+LINVIEW connection (DESIGN.md §5): the mLSTM memory update
+
+    C_t = f_t · C_{t-1} + i_t · v_t k_tᵀ
+
+is a *rank-1 factored-delta update of a matrix view* — the paper's §4.2
+representation is this architecture's native recurrence, and the decode
+path applies it literally (a Sherman–Morrison-style O(d²) step instead of
+any O(d³) recompute).
+
+Training uses a chunkwise-parallel form with exact log-space
+stabilization (the xLSTM m_t trick carried at chunk granularity): carry
+(S̃, ñ, m̄) with true state S = S̃·exp(m̄); all within-chunk weights are
+exponentiated relative to a per-query running max.  The sLSTM recurrence
+mixes h_{t-1} into the gates, is not parallelizable (xLSTM paper §2.3),
+and runs as a lax.scan over time — its GPU-fused-kernel trick has no TPU
+analogue at the XLA level; see DESIGN.md hardware-adaptation notes.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import shard
+from . import layers
+
+NEG = -1e30
+
+
+def _mlstm_dims(cfg):
+    d_inner = int(cfg.xlstm.proj_factor * cfg.d_model)
+    h = cfg.n_heads
+    hd = d_inner // h
+    return d_inner, h, hd
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def init_mlstm(cfg, dtype, rng) -> Dict:
+    d = cfg.d_model
+    d_inner, h, hd = _mlstm_dims(cfg)
+    k = cfg.xlstm.conv_kernel
+    ks = jax.random.split(rng, 8)
+    sd, sdi = d ** -0.5, d_inner ** -0.5
+    return {
+        "up_l": (jax.random.normal(ks[0], (d, d_inner), jnp.float32) * sd).astype(dtype),
+        "up_r": (jax.random.normal(ks[1], (d, d_inner), jnp.float32) * sd).astype(dtype),
+        "conv_w": (jax.random.normal(ks[2], (k, d_inner), jnp.float32) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((d_inner,), dtype),
+        # headwise (block-diagonal) q/k/v projections — the xLSTM paper's
+        # LinearHeadwiseExpand; a dense d_inner² projection would overshoot
+        # the 350M budget by ~3×.
+        "wq": (jax.random.normal(ks[3], (h, hd, hd), jnp.float32) * hd ** -0.5).astype(dtype),
+        "wk": (jax.random.normal(ks[4], (h, hd, hd), jnp.float32) * hd ** -0.5).astype(dtype),
+        "wv": (jax.random.normal(ks[5], (h, hd, hd), jnp.float32) * hd ** -0.5).astype(dtype),
+        "w_igate": jnp.zeros((d_inner, h), jnp.float32),
+        "b_igate": jnp.full((h,), -3.0, jnp.float32),   # small input gate init
+        "w_fgate": jnp.zeros((d_inner, h), jnp.float32),
+        "b_fgate": jnp.full((h,), 3.0, jnp.float32),    # long-memory init
+        "norm": layers.init_rmsnorm(d_inner, dtype),
+        "down": (jax.random.normal(ks[6], (d_inner, d), jnp.float32) * sdi).astype(dtype),
+    }
+
+
+def axes_mlstm(cfg) -> Dict:
+    return {
+        "up_l": ("fsdp", "ff"), "up_r": ("fsdp", "ff"),
+        "conv_w": (None, "ff"), "conv_b": ("ff",),
+        "wq": ("heads", None, None), "wk": ("heads", None, None),
+        "wv": ("heads", None, None),
+        "w_igate": (None, "heads"), "b_igate": ("heads",),
+        "w_fgate": (None, "heads"), "b_fgate": ("heads",),
+        "norm": layers.axes_rmsnorm(),
+        "down": ("ff", "fsdp"),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    k = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + x.shape[1], :] * w[i][None, None, :]
+              for i in range(k))
+    return jax.nn.silu((out + b[None, None, :]).astype(jnp.float32)
+                       ).astype(x.dtype)
+
+
+def mlstm_chunkwise(q, k, v, log_i, log_f, chunk: int):
+    """Stabilized chunkwise mLSTM.
+
+    q/k/v: (B,S,H,hd) f32; log_i/log_f: (B,S,H) f32.  Returns (B,S,H,hd).
+    """
+    b, s_orig, h, hd = q.shape
+    chunk = min(chunk, s_orig) if s_orig % chunk else chunk
+    pad = (-s_orig) % chunk
+    if pad:  # causal: padded tail cannot affect earlier outputs (truncated)
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        log_i = jnp.pad(log_i, ((0, 0), (0, pad), (0, 0)))
+        log_f = jnp.pad(log_f, ((0, 0), (0, pad), (0, 0)))
+    s = s_orig + pad
+    nc = s // chunk
+    qc = q.reshape(b, nc, chunk, h, hd) * (hd ** -0.5)
+    kc = k.reshape(b, nc, chunk, h, hd)
+    vc = v.reshape(b, nc, chunk, h, hd)
+    lic = log_i.reshape(b, nc, chunk, h)
+    lfc = log_f.reshape(b, nc, chunk, h)
+    cumf = jnp.cumsum(lfc, axis=2)                   # F_t within chunk
+    f_end = cumf[:, :, -1, :]
+
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    def per_chunk(carry, inp):
+        s_t, n_t, m_bar = carry                      # (B,H,hd,hd),(B,H,hd),(B,H)
+        qb, kb, vb, li, cf, fe = inp
+
+        # log-weights
+        lw_intra = (cf[:, :, None, :] - cf[:, None, :, :]
+                    + li[:, None, :, :])             # (B,t,u,H)
+        lw_intra = jnp.where(tri[None, :, :, None], lw_intra, NEG)
+        lw_inter = cf + m_bar[:, None, :]            # (B,t,H)
+
+        m_q = jnp.maximum(jnp.max(lw_intra, axis=2), lw_inter)  # (B,t,H)
+        w_intra = jnp.exp(lw_intra - m_q[:, :, None, :])
+        w_inter = jnp.exp(lw_inter - m_q)
+
+        qk = jnp.einsum("bthd,buhd->btuh", qb, kb)   # (B,t,u,H)
+        numer = jnp.einsum("btuh,btuh,buhd->bthd", qk, w_intra, vb)
+        numer = numer + w_inter[..., None] * jnp.einsum(
+            "bthd,bhde->bthe", qb, s_t)
+        denom = jnp.einsum("btuh,btuh->bth", qk, w_intra)
+        denom = denom + w_inter * jnp.einsum("bthd,bhd->bth", qb, n_t)
+        hout = numer / jnp.maximum(jnp.abs(denom),
+                                   jnp.exp(-m_q))[..., None]
+
+        # state update (stabilized at new running max m_bar')
+        lw_state = fe[:, None, :] - cf + li          # (B,u,H)
+        m_new = jnp.maximum(m_bar + fe, jnp.max(lw_state, axis=1))
+        w_old = jnp.exp(m_bar + fe - m_new)          # (B,H)
+        w_add = jnp.exp(lw_state - m_new[:, None, :])
+        s_new = (w_old[:, :, None, None] * s_t +
+                 jnp.einsum("buh,buhd,buhe->bhde", w_add, kb, vb))
+        n_new = (w_old[:, :, None] * n_t +
+                 jnp.einsum("buh,buhd->bhd", w_add, kb))
+        return (s_new, n_new, m_new), hout
+
+    init = (jnp.zeros((b, h, hd, hd), jnp.float32),
+            jnp.zeros((b, h, hd), jnp.float32),
+            jnp.full((b, h), 0.0, jnp.float32))
+    inputs = tuple(jnp.moveaxis(x, 1, 0) for x in
+                   (qc, kc, vc, lic, cumf, f_end))
+    _, hs = jax.lax.scan(per_chunk, init, inputs)
+    return jnp.moveaxis(hs, 0, 1).reshape(b, s, h, hd)[:, :s_orig]
+
+
+def mlstm_block(params: Dict, cfg, x: jax.Array) -> jax.Array:
+    """x: (B,S,D) → (B,S,D)."""
+    b, s, d = x.shape
+    d_inner, h, hd = _mlstm_dims(cfg)
+    left = jnp.einsum("bsd,de->bse", x, params["up_l"])
+    right = jnp.einsum("bsd,de->bse", x, params["up_r"])
+    left = shard(left, "batch", None, "ff")
+    c = _causal_conv(left, params["conv_w"], params["conv_b"])
+    ch = c.reshape(b, s, h, hd)
+    lh = left.reshape(b, s, h, hd)
+    q = jnp.einsum("bshd,hde->bshe", ch, params["wq"])
+    k = jnp.einsum("bshd,hde->bshe", ch, params["wk"])
+    v = jnp.einsum("bshd,hde->bshe", lh, params["wv"])
+    cf = c.astype(jnp.float32)
+    log_i = (jnp.einsum("bse,eh->bsh", cf, params["w_igate"])
+             + params["b_igate"][None, None, :])
+    log_f = -jax.nn.softplus(-(jnp.einsum("bse,eh->bsh", cf, params["w_fgate"])
+                               + params["b_fgate"][None, None, :]))
+    y = mlstm_chunkwise(q.astype(jnp.float32), k.astype(jnp.float32),
+                        v.astype(jnp.float32), log_i, log_f,
+                        cfg.xlstm.chunk)
+    y = y.reshape(b, s, d_inner).astype(x.dtype)
+    y = layers.rmsnorm(params["norm"], y, cfg.norm_eps)
+    y = y * jax.nn.silu(right.astype(jnp.float32)).astype(y.dtype)
+    out = jnp.einsum("bse,ed->bsd", y, params["down"])
+    return shard(out, "batch", None, None)
+
+
+def init_mlstm_state(cfg, batch: int, dtype) -> Dict:
+    d_inner, h, hd = _mlstm_dims(cfg)
+    k = cfg.xlstm.conv_kernel
+    return {
+        "conv": jnp.zeros((batch, k - 1, d_inner), dtype),
+        "s": jnp.zeros((batch, h, hd, hd), jnp.float32),
+        "n": jnp.zeros((batch, h, hd), jnp.float32),
+        "m": jnp.zeros((batch, h), jnp.float32),
+    }
+
+
+def axes_mlstm_state() -> Dict:
+    return {"conv": ("batch", None, "ff"),
+            "s": ("batch", "heads", None, None),
+            "n": ("batch", "heads", None),
+            "m": ("batch", "heads")}
+
+
+def mlstm_decode_step(params: Dict, cfg, x: jax.Array, state: Dict
+                      ) -> Tuple[jax.Array, Dict]:
+    """One-token mLSTM: the LINVIEW rank-1 view update in the flesh."""
+    b = x.shape[0]
+    d_inner, h, hd = _mlstm_dims(cfg)
+    left = jnp.einsum("bsd,de->bse", x, params["up_l"])[:, 0]
+    right = jnp.einsum("bsd,de->bse", x, params["up_r"])[:, 0]
+    win = jnp.concatenate([state["conv"], left[:, None, :]], axis=1)
+    c = jnp.einsum("bkc,kc->bc", win, params["conv_w"]) + params["conv_b"]
+    c = jax.nn.silu(c.astype(jnp.float32)).astype(x.dtype)
+
+    ch = c.reshape(b, h, hd)
+    lh = left.reshape(b, h, hd)
+    q = (jnp.einsum("bhd,hde->bhe", ch, params["wq"])
+         * hd ** -0.5).astype(jnp.float32)
+    k = jnp.einsum("bhd,hde->bhe", ch, params["wk"]).astype(jnp.float32)
+    v = jnp.einsum("bhd,hde->bhe", lh, params["wv"]).astype(jnp.float32)
+    cf = c.astype(jnp.float32)
+    log_i = jnp.einsum("be,eh->bh", cf, params["w_igate"]) + params["b_igate"]
+    log_f = -jax.nn.softplus(-(jnp.einsum("be,eh->bh", cf, params["w_fgate"])
+                               + params["b_fgate"]))
+
+    m_new = jnp.maximum(log_f + state["m"], log_i)
+    w_old = jnp.exp(log_f + state["m"] - m_new)
+    w_new = jnp.exp(log_i - m_new)
+    # rank-1 factored update of the matrix view C̃ (paper §4.2)
+    s_new = (w_old[:, :, None, None] * state["s"] +
+             jnp.einsum("bh,bhd,bhe->bhde", w_new, k, v))
+    n_new = w_old[:, :, None] * state["n"] + w_new[:, :, None] * k
+    numer = jnp.einsum("bhd,bhde->bhe", q, s_new)
+    denom = jnp.abs(jnp.einsum("bhd,bhd->bh", q, n_new))
+    y = numer / jnp.maximum(denom, jnp.exp(-m_new))[..., None]
+
+    y = y.reshape(b, 1, d_inner).astype(x.dtype)
+    y = layers.rmsnorm(params["norm"], y, cfg.norm_eps)
+    y = y * jax.nn.silu(right.astype(jnp.float32)).astype(y.dtype)[:, None, :]
+    out = jnp.einsum("bse,ed->bsd", y, params["down"])
+    return out, {"conv": win[:, 1:], "s": s_new, "n": n_new, "m": m_new}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def init_slstm(cfg, dtype, rng) -> Dict:
+    d = cfg.d_model
+    h = cfg.n_heads
+    hd = d // h
+    d_up = int(cfg.xlstm.slstm_proj_factor * d)
+    ks = jax.random.split(rng, 4)
+    sd = d ** -0.5
+    return {
+        "w_gates": (jax.random.normal(ks[0], (d, 4 * d), jnp.float32) * sd
+                    ).astype(jnp.float32),             # i,f,z,o from x
+        "r_gates": (jax.random.normal(ks[1], (h, hd, 4 * hd), jnp.float32)
+                    * hd ** -0.5).astype(jnp.float32),  # block-diag recurrent
+        "b_gates": jnp.concatenate([
+            jnp.full((d,), -3.0), jnp.full((d,), 3.0),
+            jnp.zeros((d,)), jnp.zeros((d,))]).astype(jnp.float32),
+        "norm": layers.init_rmsnorm(d, dtype),
+        "up_l": (jax.random.normal(ks[2], (d, d_up), jnp.float32) * sd).astype(dtype),
+        "up_r": (jax.random.normal(ks[2], (d, d_up), jnp.float32) * sd).astype(dtype),
+        "down": (jax.random.normal(ks[3], (d_up, d), jnp.float32)
+                 * d_up ** -0.5).astype(dtype),
+    }
+
+
+def axes_slstm(cfg) -> Dict:
+    # gate weights stay replicated: the recurrence consumes the full h_{t-1}
+    # every step, so sharding them would insert a collective per timestep
+    # (measured in the dry-run baseline — see EXPERIMENTS.md §Perf).
+    return {
+        "w_gates": (None, None), "r_gates": ("heads", None, None),
+        "b_gates": (None,), "norm": layers.axes_rmsnorm(),
+        "up_l": ("fsdp", "ff"), "up_r": ("fsdp", "ff"),
+        "down": ("ff", "fsdp"),
+    }
+
+
+def _slstm_cell(params, cfg, xw: jax.Array, carry):
+    """One time step.  xw: (B, 4D) preprojected input; carry: (c,n,h,m)."""
+    h_dim = cfg.n_heads
+    d = cfg.d_model
+    hd = d // h_dim
+    c_t, n_t, h_t, m_t = carry
+    hh = h_t.reshape(-1, h_dim, hd)
+    rec = jnp.einsum("bhd,hde->bhe", hh, params["r_gates"]).reshape(-1, 4 * d)
+    pre = xw + rec + params["b_gates"][None, :]
+    i_r, f_r, z_r, o_r = jnp.split(pre, 4, axis=-1)
+    log_i = i_r
+    log_f = -jax.nn.softplus(-f_r)
+    m_new = jnp.maximum(log_f + m_t, log_i)
+    i_g = jnp.exp(log_i - m_new)
+    f_g = jnp.exp(log_f + m_t - m_new)
+    z = jnp.tanh(z_r)
+    o = jax.nn.sigmoid(o_r)
+    c_new = f_g * c_t + i_g * z
+    n_new = f_g * n_t + i_g
+    h_new = o * c_new / jnp.maximum(n_new, 1e-6)
+    return (c_new, n_new, h_new, m_new), h_new
+
+
+def slstm_block(params: Dict, cfg, x: jax.Array) -> jax.Array:
+    """Strictly sequential sLSTM over time (lax.scan). x: (B,S,D)."""
+    b, s, d = x.shape
+    xw = jnp.einsum("bsd,de->bse", x.astype(jnp.float32), params["w_gates"])
+    init = tuple(jnp.zeros((b, d), jnp.float32) for _ in range(4))
+    (_, _, _, _), hs = jax.lax.scan(
+        lambda c, xt: _slstm_cell(params, cfg, xt, c),
+        init, jnp.moveaxis(xw, 1, 0),
+        unroll=cfg.xlstm.slstm_unroll)
+    y = jnp.moveaxis(hs, 0, 1).astype(x.dtype)       # (B,S,D)
+    y = layers.rmsnorm(params["norm"], y, cfg.norm_eps)
+    up = jnp.einsum("bsd,de->bse", y, params["up_l"])
+    gate = jnp.einsum("bsd,de->bse", y, params["up_r"])
+    up = jax.nn.gelu(up.astype(jnp.float32)).astype(up.dtype) * gate
+    out = jnp.einsum("bse,ed->bsd", up, params["down"])
+    return shard(out, "batch", None, None)
+
+
+def init_slstm_state(cfg, batch: int) -> Dict:
+    d = cfg.d_model
+    return {k: jnp.zeros((batch, d), jnp.float32) for k in "cnhm"}
+
+
+def axes_slstm_state() -> Dict:
+    return {k: ("batch", None) for k in "cnhm"}
+
+
+def slstm_decode_step(params: Dict, cfg, x: jax.Array, state: Dict
+                      ) -> Tuple[jax.Array, Dict]:
+    xw = jnp.einsum("bsd,de->bse", x.astype(jnp.float32),
+                    params["w_gates"])[:, 0]
+    carry = (state["c"], state["n"], state["h"], state["m"])
+    (c, n, h, m), h_out = _slstm_cell(params, cfg, xw, carry)
+    y = h_out[:, None, :].astype(x.dtype)
+    y = layers.rmsnorm(params["norm"], y, cfg.norm_eps)
+    up = jnp.einsum("bsd,de->bse", y, params["up_l"])
+    gate = jnp.einsum("bsd,de->bse", y, params["up_r"])
+    up = jax.nn.gelu(up.astype(jnp.float32)).astype(up.dtype) * gate
+    out = jnp.einsum("bse,ed->bsd", up, params["down"])
+    return out, {"c": c, "n": n, "h": h, "m": m}

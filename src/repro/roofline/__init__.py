@@ -1,0 +1,7 @@
+"""Roofline analysis from compiled dry-run artifacts."""
+
+from .hw import TPU_V5E
+from .analysis import RooflineReport, analyze_compiled, parse_collectives
+
+__all__ = ["TPU_V5E", "RooflineReport", "analyze_compiled",
+           "parse_collectives"]

@@ -1,0 +1,436 @@
+"""Trip-count-aware cost walker over optimized (post-partitioning) HLO text.
+
+Why not ``compiled.cost_analysis()``: XLA prices a while-loop body ONCE,
+but every model here scans over its layer stack, so flops/bytes would be
+undercounted by ~n_layers (verified empirically — see EXPERIMENTS.md
+§Dry-run).  This walker:
+
+  * splits the module into named computations,
+  * prices each op line (dot flops from shapes + contracting dims,
+    elementwise/reduce flops, HBM bytes at fusion boundaries),
+  * looks operand shapes up at their def sites (operand refs carry no
+    types in optimized HLO),
+  * multiplies while bodies by ``backend_config.known_trip_count`` and
+    recurses through fusion/call sites (flops only — fusion interiors
+    live in registers),
+  * prices collectives with ring formulas using true operand bytes.
+
+Costs are per-chip: the input is the SPMD-partitioned module.
+"""
+
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0, "s4": 1, "u4": 1, "f8e4m3fn": 1,
+    "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(
+    r"(pred|bf16|f16|f32|f64|s4|u4|s8|u8|s16|u16|s32|u32|s64|u64|c64|c128|"
+    r"f8e4m3fn|f8e5m2|token)\[([0-9,]*)\]")
+
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=")
+_OP_RE = re.compile(r"[=\s)]([a-z][\w\-]*)\(")
+_CALLS_RE = re.compile(r"calls=%([\w.\-]+)")
+_TO_APPLY_RE = re.compile(r"to_apply=%([\w.\-]+)")
+_WHILE_RE = re.compile(r"condition=%([\w.\-]+),\s*body=%([\w.\-]+)")
+_TRIP_RE = re.compile(r'known_trip_count[":{\s]+n[":\s]+"?(\d+)')
+_OPERANDS_RE = re.compile(r"%([\w.\-]+)")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+# ~1 flop per output element
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "abs",
+    "negate", "exponential", "log", "tanh", "rsqrt", "sqrt", "power",
+    "compare", "select", "and", "or", "not", "xor", "floor", "ceil",
+    "round-nearest-afz", "sign", "cosine", "sine", "atan2", "remainder",
+    "shift-left", "shift-right-logical", "shift-right-arithmetic",
+    "clamp", "expm1", "log1p", "logistic", "cbrt", "erf",
+}
+_ZERO_BYTES_OPS = {
+    "parameter", "get-tuple-element", "tuple", "bitcast", "constant",
+    "after-all", "add-dependency", "partition-id", "replica-id", "iota",
+}
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _type_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _type_elems(text: str) -> int:
+    total = 0
+    for _, dims in _SHAPE_RE.findall(text):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n
+    return total
+
+
+@dataclass
+class CollectiveRecord:
+    kind: str
+    wire_bytes: float
+    group_size: int
+    count: float  # trip-weighted occurrences
+    example: str = ""
+
+
+@dataclass
+class WalkCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collective_wire: float = 0.0
+    collectives: List[CollectiveRecord] = field(default_factory=list)
+    bytes_by_op: Dict[str, float] = field(default_factory=dict)
+
+    def add_bytes(self, op: str, b: float):
+        self.bytes += b
+        self.bytes_by_op[op] = self.bytes_by_op.get(op, 0.0) + b
+
+    def scaled(self, k: float) -> "WalkCost":
+        return WalkCost(
+            self.flops * k, self.bytes * k, self.collective_wire * k,
+            [CollectiveRecord(c.kind, c.wire_bytes, c.group_size,
+                              c.count * k, c.example)
+             for c in self.collectives],
+            {op: b * k for op, b in self.bytes_by_op.items()})
+
+    def __add__(self, o: "WalkCost") -> "WalkCost":
+        merged = dict(self.bytes_by_op)
+        for op, b in o.bytes_by_op.items():
+            merged[op] = merged.get(op, 0.0) + b
+        return WalkCost(self.flops + o.flops, self.bytes + o.bytes,
+                        self.collective_wire + o.collective_wire,
+                        self.collectives + o.collectives, merged)
+
+
+def _split_computations(text: str) -> Dict[str, List[str]]:
+    comps: Dict[str, List[str]] = {}
+    cur: Optional[str] = None
+    body: List[str] = []
+    for line in text.splitlines():
+        m = re.match(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\([^)]*\)[^{]*\{\s*$",
+                     line)
+        if m and not line.startswith(" "):
+            cur = m.group(1)
+            body = []
+            comps[cur] = body
+            if line.startswith("ENTRY"):
+                comps["__entry__"] = body
+            continue
+        if cur is not None:
+            if line.startswith("}"):
+                cur = None
+            else:
+                body.append(line)
+    return comps
+
+
+def _ring_wire(kind: str, result_b: int, operand_b: int, g: int) -> float:
+    if g <= 1:
+        return 0.0
+    if kind == "all-gather":
+        return float((g - 1) * operand_b)
+    if kind == "reduce-scatter":
+        return float((g - 1) * result_b)
+    if kind == "all-reduce":
+        return 2.0 * (g - 1) / g * operand_b
+    if kind == "all-to-all":
+        return (g - 1) / g * operand_b
+    if kind == "collective-permute":
+        return float(operand_b)
+    return float(operand_b)
+
+
+class HloWalker:
+    def __init__(self, text: str, f32_collectives_as_bf16: bool = False):
+        self.comps = _split_computations(text)
+        self._memo: Dict[str, WalkCost] = {}
+        self.f32_collectives_as_bf16 = f32_collectives_as_bf16
+
+    def entry_cost(self) -> WalkCost:
+        return self.comp_cost("__entry__")
+
+    def comp_cost(self, name: str) -> WalkCost:
+        if name in self._memo:
+            return self._memo[name]
+        self._memo[name] = WalkCost()  # cycle guard
+        lines = self.comps.get(name)
+        if lines is None:
+            return WalkCost()
+        defs: Dict[str, int] = {}
+        total = WalkCost()
+        for line in lines:
+            total = total + self._line_cost(line, defs)
+        self._memo[name] = total
+        return total
+
+    # -- single op line ------------------------------------------------------
+    def _line_cost(self, line: str, defs: Dict[str, int]) -> WalkCost:
+        dm = _DEF_RE.match(line)
+        if not dm:
+            return WalkCost()
+        name = dm.group(1)
+        eq = line.index("=")
+        rest = line[eq + 1:]
+        om = _OP_RE.search(line)
+        op = om.group(1) if om else ""
+        # result type(s): between '=' and the op name
+        result_part = rest[:rest.find(op + "(")] if op else rest
+        result_bytes = _type_bytes(result_part)
+        result_elems = _type_elems(result_part)
+        defs[name] = result_bytes
+
+        out = WalkCost()
+
+        # operand bytes via def-site lookup
+        open_paren = line.find(op + "(") + len(op) if op else -1
+        operand_text = line[open_paren:line.find(")", open_paren)] \
+            if op else ""
+        operand_names = _OPERANDS_RE.findall(operand_text)
+        operand_bytes = sum(defs.get(n, 0) for n in operand_names)
+
+        # dtype promotion artifacts: XLA:CPU upconverts bf16 operands to
+        # f32 (dots are f32-only on CPU); on the TPU target bf16 is native
+        # and these converts don't exist.  Price a pure convert at zero
+        # traffic and propagate the NARROW dtype's footprint to consumers.
+        if op == "convert":
+            defs[name] = min(result_bytes, operand_bytes or result_bytes)
+            return out
+        if op == "fusion" and self._is_pure_convert(line):
+            defs[name] = min(result_bytes, operand_bytes or result_bytes)
+            return out
+
+        if op == "while":
+            wm = _WHILE_RE.search(line)
+            trip = 1
+            tm = _TRIP_RE.search(line)
+            if tm:
+                trip = int(tm.group(1))
+            if wm:
+                cond = self.comp_cost(wm.group(1))
+                body = self.comp_cost(wm.group(2))
+                out = out + (cond + body).scaled(trip)
+            return out
+
+        if op in ("fusion", "call", "custom-call", "reduce", "sort", "map",
+                  "reduce-window", "select-and-scatter", "scatter",
+                  "conditional"):
+            callees = _CALLS_RE.findall(line) + _TO_APPLY_RE.findall(line)
+            for cm in callees:
+                sub = self.comp_cost(cm)
+                # fusion interiors: flops only (bytes live at the boundary)
+                out.flops += sub.flops
+                out.collective_wire += sub.collective_wire
+                out.collectives += sub.collectives
+            # fusion traffic model: a kLoop fusion streams its OUTPUT once
+            # and reads each input according to the interior access
+            # pattern — full for reductions, slice-sized for interior
+            # dynamic-slices, ≈result-sized for elementwise.
+            op_byte_list = [defs.get(n, 0) for n in operand_names]
+            biggest = max(op_byte_list, default=0)
+            interior = [l for cm in callees for l in self.comps.get(cm, ())]
+            has_dus = any("dynamic-update-slice(" in l for l in interior)
+            has_reduce = any(re.search(r"[=\s]reduce(-window)?\(", l)
+                             for l in interior)
+            aliased = any(b == result_bytes for b in op_byte_list)
+            inplace = op == "scatter" or (has_dus and aliased
+                                          and result_bytes > 0)
+            if inplace:
+                upd = self._dus_update_bytes(callees) or max(
+                    result_bytes // 64, 1)
+                # write the slice + read each other operand at ≤ slice size
+                reads = sum(min(b, upd) for b in op_byte_list) - \
+                    min(result_bytes, upd)
+                out.add_bytes(op + "(inplace)", 2.0 * upd + reads)
+            elif op == "reduce" or has_reduce:
+                out.add_bytes(op, result_bytes + operand_bytes)
+            else:
+                reads = sum(min(b, result_bytes) for b in op_byte_list)
+                out.add_bytes(op, result_bytes + reads)
+            if op == "reduce":
+                out.flops += sum(op_byte_list) / 4.0
+            return out
+
+        if op == "dynamic-update-slice":
+            # in-place: read+write the update slice only
+            upd = defs.get(operand_names[1], 0) if len(operand_names) > 1 \
+                else 0
+            out.add_bytes(op, 2.0 * upd)
+            return out
+
+        if op in ("dynamic-slice", "slice", "gather", "concatenate",
+                  "reshape", "transpose", "broadcast", "reverse", "copy"):
+            out.add_bytes(op, 2.0 * result_bytes)
+            return out
+
+        if op == "dot":
+            out.flops += self._dot_flops(line, result_elems, defs,
+                                         operand_names)
+            out.add_bytes(op, result_bytes + operand_bytes)
+            return out
+
+        if op == "convolution":
+            # not used by the models; price like a dot on result elems
+            out.flops += 2.0 * result_elems
+            out.add_bytes(op, result_bytes + operand_bytes)
+            return out
+
+        if any(op.startswith(c) for c in _COLLECTIVES):
+            if op.endswith("-done"):
+                return out
+            kind = next(c for c in _COLLECTIVES if op.startswith(c))
+            gm = _GROUPS_RE.search(line)
+            if gm:
+                g = len(gm.group(1).split(","))
+            else:
+                gi = _GROUPS_IOTA_RE.search(line)
+                g = int(gi.group(2)) if gi else 1
+            ob = operand_bytes or result_bytes
+            rb = result_bytes
+            # XLA:CPU promotes bf16 collectives to f32; the TPU target
+            # reduces bf16 natively.  When the module is a bf16 model,
+            # price f32 collective payloads at bf16 width.
+            if self.f32_collectives_as_bf16 and " f32[" in line[:120]:
+                ob //= 2
+                rb //= 2
+            wire = _ring_wire(kind, rb, ob, g)
+            out.collective_wire += wire
+            out.add_bytes(op, rb + ob)
+            out.collectives.append(CollectiveRecord(kind, wire, g, 1.0,
+                                                    line.strip()[:140]))
+            return out
+
+        if op in _ZERO_BYTES_OPS:
+            return out
+
+        if op in _ELEMENTWISE:
+            out.flops += result_elems
+        out.add_bytes(op or "?", result_bytes + operand_bytes)
+        return out
+
+    _PURE_CONVERT_OPS = {"parameter", "convert", "bitcast", "copy",
+                         "transpose", "reshape"}
+
+    def _is_pure_convert(self, line: str) -> bool:
+        """Fusion wrapping only a dtype conversion (+ layout ops)."""
+        callees = _CALLS_RE.findall(line)
+        if not callees:
+            return False
+        memo = getattr(self, "_pc_memo", None)
+        if memo is None:
+            memo = self._pc_memo = {}
+        cm = callees[0]
+        if cm in memo:
+            return memo[cm]
+        ok = True
+        saw_convert = False
+        for l in self.comps.get(cm, ()):
+            om = _OP_RE.search(l)
+            lop = om.group(1) if om else ""
+            if not lop:
+                continue
+            if lop == "convert":
+                saw_convert = True
+            elif lop not in self._PURE_CONVERT_OPS:
+                ok = False
+                break
+        memo[cm] = ok and saw_convert
+        return memo[cm]
+
+    def _dus_update_bytes(self, callees: List[str]) -> int:
+        """Bytes of the update operand of an interior dynamic-update-slice."""
+        for cm in callees:
+            cached = getattr(self, "_dus_memo", {}).get(cm)
+            if cached is not None:
+                return cached
+            local: Dict[str, int] = {}
+            found = 0
+            for l in self.comps.get(cm, ()):
+                dm = _DEF_RE.match(l)
+                if not dm:
+                    continue
+                om = _OP_RE.search(l)
+                lop = om.group(1) if om else ""
+                eq = l.index("=")
+                rest = l[eq + 1:]
+                rpart = rest[:rest.find(lop + "(")] if lop else rest
+                local[dm.group(1)] = _type_bytes(rpart)
+                if lop == "dynamic-update-slice":
+                    open_p = l.find(lop + "(") + len(lop)
+                    otext = l[open_p:l.find(")", open_p)]
+                    onames = _OPERANDS_RE.findall(otext)
+                    if len(onames) > 1:
+                        found = max(found, local.get(onames[1], 0))
+            if not hasattr(self, "_dus_memo"):
+                self._dus_memo = {}
+            self._dus_memo[cm] = found
+            if found:
+                return found
+        return 0
+
+    def _dot_flops(self, line: str, result_elems: int, defs, operand_names
+                   ) -> float:
+        m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", line)
+        if not m:
+            return 2.0 * result_elems
+        cdims = [int(x) for x in m.group(1).split(",") if x]
+        # lhs shape: first operand's def — re-parse dims from its type is
+        # not stored; fall back to parsing the operand type if present in
+        # the line, else estimate from bytes.  Optimized HLO keeps operand
+        # types out of the line, so we track elem shapes separately.
+        shp = self._shape_of.get(operand_names[0]) if hasattr(
+            self, "_shape_of") else None
+        if shp:
+            contracted = 1
+            for c in cdims:
+                contracted *= shp[c]
+            return 2.0 * result_elems * contracted
+        return 2.0 * result_elems  # conservative
+
+
+def walk_hlo(text: str, f32_collectives_as_bf16: bool = False) -> WalkCost:
+    """Full-module per-chip cost with trip-count awareness."""
+    walker = HloWalker(text, f32_collectives_as_bf16)
+    _attach_shapes(walker)
+    return walker.entry_cost()
+
+
+def _attach_shapes(walker: HloWalker):
+    """Second metadata pass: record full dim tuples per def for dot pricing."""
+    shape_of: Dict[str, Tuple[int, ...]] = {}
+    for lines in walker.comps.values():
+        for line in lines:
+            dm = _DEF_RE.match(line)
+            if not dm:
+                continue
+            om = _OP_RE.search(line)
+            op = om.group(1) if om else ""
+            eq = line.index("=")
+            rest = line[eq + 1:]
+            result_part = rest[:rest.find(op + "(")] if op else rest
+            shapes = _SHAPE_RE.findall(result_part)
+            if len(shapes) == 1:
+                dims = tuple(int(x) for x in shapes[0][1].split(",")
+                             if x) or ()
+                shape_of[dm.group(1)] = dims
+    walker._shape_of = shape_of

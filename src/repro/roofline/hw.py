@@ -1,0 +1,23 @@
+"""Hardware constants for the roofline model (assignment-specified)."""
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class HardwareSpec:
+    name: str
+    peak_flops_bf16: float      # FLOP/s per chip
+    hbm_bandwidth: float        # B/s per chip
+    ici_link_bandwidth: float   # B/s per link
+    ici_links: int              # links per chip participating in a collective
+    hbm_bytes: float            # capacity per chip
+
+
+TPU_V5E = HardwareSpec(
+    name="tpu-v5e",
+    peak_flops_bf16=197e12,
+    hbm_bandwidth=819e9,
+    ici_link_bandwidth=50e9,
+    ici_links=1,     # conservative single-link accounting (see DESIGN.md)
+    hbm_bytes=16e9,
+)

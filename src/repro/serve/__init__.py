@@ -1,0 +1,6 @@
+"""Serving substrate: batched decode engine + incremental logit views."""
+
+from .engine import ServeEngine
+from .incremental_views import IncrementalLogitView
+
+__all__ = ["ServeEngine", "IncrementalLogitView"]

@@ -1,0 +1,110 @@
+"""Batched serving engine: prefill + decode with KV/SSM caches.
+
+A deliberately small but real engine: fixed-batch slots, greedy/temperature
+sampling, per-slot stop handling, and a jitted decode step shared across
+slots.  ``launch/serve.py`` drives it; the dry-run lowers its
+``serve_step`` for the decode shapes.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.model import LM
+
+
+@dataclass
+class ServeEngine:
+    model: LM
+    params: Any
+    batch_size: int = 8
+    max_seq: int = 2048
+    temperature: float = 0.0
+    seed: int = 0
+
+    def __post_init__(self):
+        cfg = self.model.cfg
+        if cfg.encoder_only:
+            raise ValueError("encoder-only model has no decode step")
+        self.cache = self.model.init_cache(self.batch_size, self.max_seq)
+        self._decode = jax.jit(self.model.decode_step,
+                               donate_argnums=(1,))
+        self._rng = jax.random.PRNGKey(self.seed)
+
+    def prefill(self, prompts: np.ndarray) -> jax.Array:
+        """Populate the cache from the prompts.
+
+        Transformer families use the batched single-pass prefill (also
+        correct for bidirectional VLM prefixes); recurrent families
+        (ssm/hybrid) step their state token-by-token.
+
+        prompts: (B, S) int32 → last-token logits (B, V).
+        """
+        b, s = prompts.shape
+        assert b == self.batch_size
+        if self.model.cfg.family in ("dense", "moe", "vlm"):
+            logits, self.cache = jax.jit(
+                self.model.prefill, static_argnames=("max_seq",))(
+                self.params, {"tokens": jnp.asarray(prompts)},
+                max_seq=self.max_seq)
+            self._pos = s
+            return logits[:, -1, :]
+        logits = None
+        for t in range(s):
+            logits, self.cache = self._decode(
+                self.params, self.cache, jnp.asarray(prompts[:, t:t + 1]),
+                jnp.asarray(t, jnp.int32))
+        self._pos = s
+        return logits[:, 0, :]
+
+    def sample(self, logits: jax.Array) -> jax.Array:
+        if self.temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        self._rng, sub = jax.random.split(self._rng)
+        return jax.random.categorical(sub, logits / self.temperature,
+                                      axis=-1).astype(jnp.int32)
+
+    def generate(self, prompts: np.ndarray, max_new: int = 32,
+                 stop_token: Optional[int] = None) -> np.ndarray:
+        last = self.prefill(prompts)
+        out: List[np.ndarray] = []
+        tok = self.sample(last)
+        done = np.zeros(self.batch_size, bool)
+        for i in range(max_new):
+            out.append(np.asarray(tok))
+            if stop_token is not None:
+                done |= np.asarray(tok) == stop_token
+                if done.all():
+                    break
+            logits, self.cache = self._decode(
+                self.params, self.cache, tok[:, None],
+                jnp.asarray(self._pos, jnp.int32))
+            self._pos += 1
+            tok = self.sample(logits[:, 0, :])
+        return np.stack(out, axis=1)
+
+
+def make_serve_step(model: LM):
+    """The dry-run's decode entrypoint: one token for the whole batch."""
+
+    def serve_step(params, cache, token, pos):
+        return model.decode_step(params, cache, token, pos)
+
+    return serve_step
+
+
+def make_prefill_step(model: LM):
+    """The dry-run's prefill entrypoint: full forward, returns logits."""
+
+    def prefill_step(params, batch):
+        logits, _ = model.forward(params, batch)
+        return logits
+
+    return prefill_step

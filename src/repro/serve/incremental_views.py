@@ -1,0 +1,78 @@
+"""Incremental logit views (beyond-paper integration #3).
+
+Serving systems cache *views over model outputs*: classifier scores for a
+corpus, prompt-prefix logits, retrieval embeddings.  When the weights get
+a low-rank update ΔW = U Vᵀ (adapter hot-swap, online fine-tune step),
+re-running the model over the corpus costs O(m·n·p); LINVIEW's delta rule
+for the final linear view
+
+    Y = H W     ⇒     ΔY = H (ΔW) = (H U) Vᵀ
+
+costs O(m·k·(n+p)) — §5.1's OLS maintenance transplanted to serving.
+This module maintains such views through the LINVIEW engine, so the same
+compiler/trigger machinery drives both the analytics and serving paths.
+
+Scope note (DESIGN.md §5): this is exact only for views that are linear
+in the updated weight (lm-head/classifier/embedding-projection layers —
+the common hot-swap case).  Updates to weights *behind* a nonlinearity
+invalidate the cache; `covers()` reports which updates are maintainable
+and the engine falls back to re-encoding otherwise.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (IncrementalEngine, Program, dim, matmul, transpose,
+                        var)
+
+
+class IncrementalLogitView:
+    """Maintains Y = H · Wᵀ under rank-k updates to W.
+
+    H: (m, d) cached hidden states for a corpus of m items (computed once
+    with the frozen backbone); W: (p, d) output head (vocab or classes).
+    """
+
+    def __init__(self, hidden: jax.Array, head: jax.Array, rank: int = 1):
+        m, d = hidden.shape
+        p, d2 = head.shape
+        assert d == d2
+        prog = Program(name="logit_view")
+        M, D, P_ = dim("m"), dim("d"), dim("p")
+        H = prog.input("H", (M, D))
+        W = prog.input("W", (P_, D))
+        prog.let("Y", matmul(H, transpose(W)))
+        prog.outputs = ["Y"]
+        prog.bind_dims(m=m, d=d, p=p)
+        self.engine = IncrementalEngine(prog, {"W": rank, "H": rank})
+        self.engine.initialize({"H": jnp.asarray(hidden, jnp.float32),
+                                "W": jnp.asarray(head, jnp.float32)})
+
+    @property
+    def logits(self) -> jax.Array:
+        return self.engine.views["Y"]
+
+    def update_head(self, u: jax.Array, v: jax.Array) -> jax.Array:
+        """W += u vᵀ (u: (p, k) class/vocab side, v: (d, k))."""
+        self.engine.apply_update("W", u, v)
+        return self.logits
+
+    def add_items(self, u: jax.Array, v: jax.Array) -> jax.Array:
+        """Corpus-side update H += u vᵀ (e.g. refreshed item embeddings
+        for rows picked out by u)."""
+        self.engine.apply_update("H", u, v)
+        return self.logits
+
+    @staticmethod
+    def covers(update_path: str) -> bool:
+        """Is a weight at ``update_path`` maintainable exactly?"""
+        linear_views = ("lm_head", "embed", "frontend", "router")
+        return any(t in update_path for t in linear_views)
+
+    def speedup_estimate(self) -> float:
+        return (self.engine.reeval_flops() /
+                max(self.engine.trigger_flops("W"), 1.0))

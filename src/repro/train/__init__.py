@@ -1,0 +1,7 @@
+"""Training substrate: optimizers, train step, gradient compression."""
+
+from .optimizer import adamw_init, adamw_update, OptState
+from .train_step import make_train_step, TrainState
+
+__all__ = ["adamw_init", "adamw_update", "OptState", "make_train_step",
+           "TrainState"]

@@ -1,0 +1,176 @@
+"""LINVIEW low-rank gradient compression (beyond-paper integration #1).
+
+The paper's core insight — "communicate only the low-rank factors, never
+the full matrix" (§6 Data Partitioning / §4.2) — applied to the data-
+parallel gradient all-reduce.  PowerSGD-shaped:
+
+    P = G·Q₀;  P = orth(P);  Q = Gᵀ·P;   Ĝ = P·Qᵀ
+
+Only P (n×k) and Q (m×k) cross the ICI instead of G (n×m): the DP
+collective shrinks by ~min(n,m)/2k.  An error-feedback buffer keeps the
+compression unbiased over time (E_{t+1} = G − Ĝ accumulated into the next
+step's gradient), which preserves convergence.
+
+Two execution paths:
+  * ``compress_tree`` / ``decompress_tree`` — representation-level, used
+    by the optimizer wrapper and the incremental checkpointer.
+  * ``compressed_psum`` — an explicit shard_map all-reduce over the data
+    axis that psums factors instead of gradients; this is the version the
+    dry-run's collective-bytes parse sees (EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+class CompressionState(NamedTuple):
+    q: Any       # per-leaf right factors (warm-started between steps)
+    err: Any     # error-feedback buffers
+
+
+def _is_compressible(x: jax.Array, min_dim: int) -> bool:
+    return x.ndim >= 2 and min(_matrix_shape(x)) >= min_dim
+
+
+def _matrix_shape(x: jax.Array) -> Tuple[int, int]:
+    """Collapse leading dims: (a, b, …, z) → (a·b·…, z)."""
+    return (int(x.size // x.shape[-1]), int(x.shape[-1]))
+
+
+def init_compression(params, rank: int = 4, min_dim: int = 128, seed: int = 0
+                     ) -> CompressionState:
+    def q_init(path, p):
+        if not _is_compressible(p, min_dim):
+            return None
+        n, m = _matrix_shape(p)
+        key = jax.random.fold_in(jax.random.PRNGKey(seed), hash(path) % (2**31))
+        return jax.random.normal(key, (m, rank), jnp.float32)
+
+    def e_init(p):
+        return (jnp.zeros(_matrix_shape(p), jnp.float32)
+                if _is_compressible(p, min_dim) else None)
+
+    q = jax.tree.map_with_path(lambda kp, p: q_init(str(kp), p), params)
+    err = jax.tree.map(e_init, params)
+    return CompressionState(q=q, err=err)
+
+
+def _orthonormalize(p: jax.Array) -> jax.Array:
+    """Gram-Schmidt via QR (k is tiny, cost O(nk²))."""
+    q, _ = jnp.linalg.qr(p)
+    return q
+
+
+def compress_leaf(g: jax.Array, q0: Optional[jax.Array],
+                  err: Optional[jax.Array]):
+    """One power-iteration step → (P, Q, new_err).  Non-matrix leaves pass
+    through untouched (returned as (g, None, None))."""
+    if q0 is None:
+        return g, None, None
+    gm = g.reshape(_matrix_shape(g)).astype(jnp.float32) + err
+    p = gm @ q0                       # (n, k)
+    p = _orthonormalize(p)
+    q = gm.T @ p                      # (m, k)
+    approx = p @ q.T
+    return (p, q, gm - approx)
+
+
+def decompress_leaf(g_shape, dtype, p, q):
+    return (p @ q.T).reshape(g_shape).astype(dtype)
+
+
+def compress_tree(grads, state: CompressionState):
+    """→ (compressed pytree of (P,Q)|raw, new state)."""
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_q = tdef.flatten_up_to(state.q)
+    flat_e = tdef.flatten_up_to(state.err)
+    out, new_q, new_e = [], [], []
+    for g, q0, e in zip(flat_g, flat_q, flat_e):
+        if q0 is None:
+            out.append(("raw", g))
+            new_q.append(None)
+            new_e.append(None)
+        else:
+            p, q, err = compress_leaf(g, q0, e)
+            out.append(("lowrank", (p, q, g.shape, g.dtype)))
+            new_q.append(q)
+            new_e.append(err)
+    return (tdef, out), CompressionState(q=jax.tree.unflatten(tdef, new_q),
+                                         err=jax.tree.unflatten(tdef, new_e))
+
+
+def decompress_tree(compressed):
+    tdef, out = compressed
+    leaves = []
+    for kind, payload in out:
+        if kind == "raw":
+            leaves.append(payload)
+        else:
+            p, q, shape, dtype = payload
+            leaves.append(decompress_leaf(shape, dtype, p, q))
+    return jax.tree.unflatten(tdef, leaves)
+
+
+def compression_ratio(compressed) -> float:
+    """Communicated bytes: factored / raw."""
+    _, out = compressed
+    num = den = 0
+    for kind, payload in out:
+        if kind == "raw":
+            g = payload
+            num += g.size
+            den += g.size
+        else:
+            p, q, shape, _ = payload
+            num += p.size + q.size
+            den += int(jnp.prod(jnp.asarray(shape)))
+    return num / max(den, 1)
+
+
+# ---------------------------------------------------------------------------
+# explicit shard_map compressed all-reduce (visible in dry-run HLO)
+# ---------------------------------------------------------------------------
+
+
+def compressed_psum(mesh, axis: str, grads, state: CompressionState,
+                    rank: int = 4):
+    """All-reduce data-parallel gradients by psumming *factors*.
+
+    Per shard: local G_s → (P_s, Q_s) → psum(P), psum(Q) → Ĝ = P̄ Q̄ᵀ / p.
+    Bytes on the wire per matrix: 2·n·k instead of n·m.  Matrix leaves
+    only; the rest get a plain psum.
+    """
+    from jax.experimental.shard_map import shard_map
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_q = tdef.flatten_up_to(state.q)
+
+    def body(*gs):
+        outs = []
+        for g, q0 in zip(gs, flat_q):
+            if q0 is None:
+                outs.append(jax.lax.pmean(g, axis))
+            else:
+                # PowerSGD two-round schedule: reduce P, orthonormalize the
+                # REDUCED P, project, reduce Q.  Wire bytes per matrix:
+                # k(n+m) instead of n·m.
+                gm = g.reshape(_matrix_shape(g)).astype(jnp.float32)
+                p_bar = jax.lax.psum(gm @ q0, axis)
+                p_orth = _orthonormalize(p_bar)
+                q_bar = jax.lax.pmean(gm.T @ p_orth, axis)
+                approx = p_orth @ q_bar.T
+                outs.append(approx.reshape(g.shape).astype(g.dtype))
+        return tuple(outs)
+
+    spec = P(axis)  # grads arrive batch-sharded over the DP axis
+    fn = shard_map(body, mesh=mesh,
+                   in_specs=tuple(P() for _ in flat_g),
+                   out_specs=tuple(P() for _ in flat_g),
+                   check_rep=False)
+    return jax.tree.unflatten(tdef, list(fn(*flat_g)))

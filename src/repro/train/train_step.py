@@ -1,0 +1,93 @@
+"""Train step factory: loss → grads → (optional LINVIEW compression) →
+AdamW, with microbatch gradient accumulation and buffer donation.
+
+``make_train_step`` returns a pure function suitable for jax.jit with
+in/out shardings from the sharding rules; ``launch/train.py`` and
+``launch/dryrun.py`` are the two callers.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import LM
+from .optimizer import OptState, adamw_init, adamw_update, cosine_schedule
+from . import grad_compression as gc
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: OptState
+    rng: jax.Array
+
+
+def init_train_state(model: LM, rng: jax.Array) -> TrainState:
+    params = model.init(rng)
+    return TrainState(params=params, opt=adamw_init(params), rng=rng)
+
+
+def make_train_step(model: LM, *, lr: float = 3e-4, warmup: int = 100,
+                    total_steps: int = 10_000,
+                    microbatches: int = 1,
+                    compression: Optional[gc.CompressionState] = None,
+                    weight_decay: float = 0.1,
+                    grad_clip: float = 1.0) -> Callable:
+    """→ train_step(state, batch) → (state, metrics)."""
+    schedule = cosine_schedule(lr, warmup, total_steps)
+
+    def loss_fn(params, batch):
+        loss, metrics = model.loss(params, batch)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def single_grads(params, batch):
+        (loss, metrics), grads = grad_fn(params, batch)
+        return loss, metrics, grads
+
+    def accum_grads(params, batch):
+        """Microbatch accumulation: split the batch leading dim."""
+        def micro(batch_i):
+            return single_grads(params, batch_i)
+
+        split = jax.tree.map(
+            lambda x: x.reshape((microbatches, x.shape[0] // microbatches)
+                                + x.shape[1:]), batch)
+
+        def body(carry, batch_i):
+            loss_acc, grads_acc = carry
+            loss, _, grads = micro(batch_i)
+            return (loss_acc + loss,
+                    jax.tree.map(jnp.add, grads_acc, grads)), None
+
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                             params)
+        (loss_sum, grads_sum), _ = jax.lax.scan(
+            body, (jnp.zeros(()), zeros), split)
+        inv = 1.0 / microbatches
+        return (loss_sum * inv, {},
+                jax.tree.map(lambda g: g * inv, grads_sum))
+
+    def train_step(state: TrainState, batch: Dict) -> Tuple[TrainState, Dict]:
+        if microbatches > 1:
+            loss, metrics, grads = accum_grads(state.params, batch)
+        else:
+            loss, metrics, grads = single_grads(state.params, batch)
+
+        if compression is not None:
+            compressed, _ = gc.compress_tree(grads, compression)
+            grads = gc.decompress_tree(compressed)
+
+        step_lr = schedule(state.opt.step + 1)
+        new_params, new_opt, opt_metrics = adamw_update(
+            grads, state.opt, state.params, lr=step_lr,
+            weight_decay=weight_decay, grad_clip=grad_clip)
+        out_metrics = {"loss": loss, "lr": step_lr, **opt_metrics}
+        return TrainState(params=new_params, opt=new_opt,
+                          rng=state.rng), out_metrics
+
+    return train_step

@@ -1,0 +1,17 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests must see the
+real single CPU device; only launch/dryrun.py forces 512 placeholders."""
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def assert_close(a, b, rtol=2e-4, atol=2e-4, msg=""):
+    import jax.numpy as jnp
+    a = np.asarray(a, dtype=np.float64)
+    b = np.asarray(b, dtype=np.float64)
+    np.testing.assert_allclose(a, b, rtol=rtol, atol=atol, err_msg=msg)

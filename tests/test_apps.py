@@ -1,0 +1,136 @@
+"""App-level integration: every paper workload, incremental == reeval,
+analytic speedups match Table 2's ordering."""
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.apps import (OLS, BatchGradientDescent, GeneralIterative,
+                        MatrixPowers, PageRank, SumsOfPowers)
+from repro.data.updates import UpdateStream
+
+from conftest import assert_close
+
+
+def _rel(a, b):
+    ref = np.abs(np.asarray(b)).max() or 1.0
+    return np.abs(np.asarray(a) - np.asarray(b)).max() / ref
+
+
+def test_ols_stream_of_row_updates(rng):
+    m, n, p = 96, 24, 3
+    app = OLS(m, n, p)
+    inputs, beta_true = OLS.synthesize(m, n, p, seed=1)
+    app.initialize(inputs)
+    stream = UpdateStream(n=m, m=n, scale=0.05, seed=2)
+    it = iter(stream)
+    for _ in range(5):
+        u, v = next(it)
+        a = app.update(jnp.asarray(u), jnp.asarray(v))
+        b = app.update_reeval(jnp.asarray(u), jnp.asarray(v))
+    assert _rel(a, b) < 1e-3
+    # estimate should still be close-ish to the generating beta
+    assert np.abs(np.asarray(a) - beta_true).mean() < 0.5
+
+
+def test_ols_speedup_estimate_grows_with_n():
+    s1 = OLS(256, 64).speedup_estimate()
+    s2 = OLS(1024, 256).speedup_estimate()
+    assert s2 > s1 > 1.0
+
+
+@pytest.mark.parametrize("model", ["linear", "exp", "skip"])
+def test_matrix_powers_models(model, rng):
+    app = MatrixPowers(n=40, k=8, model=model)
+    app.initialize(MatrixPowers.synthesize(40, seed=0))
+    u, v = app.row_update(3, rng.normal(size=40) * 0.1)
+    a = app.update(u, v)
+    b = app.update_reeval(u, v)
+    assert _rel(a, b) < 1e-3
+
+
+def test_powers_exp_cheaper_than_linear():
+    """Table 2: incremental exp O(n²k) beats linear O(n²k²)."""
+    lin = MatrixPowers(n=64, k=16, model="linear")
+    exp = MatrixPowers(n=64, k=16, model="exp")
+    assert exp.engine.trigger_flops("A") < lin.engine.trigger_flops("A")
+
+
+def test_incremental_beats_reeval_asymptotically():
+    """Table 2: incr exp O(n²k) vs reeval exp O(n³ log k)."""
+    app = MatrixPowers(n=256, k=16, model="exp")
+    assert app.speedup_estimate() > 4.0
+
+
+def test_sums_of_powers(rng):
+    app = SumsOfPowers(n=32, k=8, model="exp")
+    app.initialize(SumsOfPowers.synthesize(32))
+    u, v = np.zeros((32, 1), np.float32), rng.normal(size=(32, 1)) * 0.1
+    u[5] = 1.0
+    a = app.update(jnp.asarray(u), jnp.asarray(v.astype(np.float32)))
+    b = app.update_reeval(jnp.asarray(u), jnp.asarray(v.astype(np.float32)))
+    assert _rel(a, b) < 1e-3
+
+
+@pytest.mark.parametrize("p_dim,expect_dense", [(1, True), (48, False)])
+def test_general_form_hybrid_choice(p_dim, expect_dense, rng):
+    """§5.3: p=1 should choose the hybrid (dense) representation for the
+    T-views; large p should stay factored."""
+    app = GeneralIterative(n=48, p=p_dim, k=8, model="linear")
+    reps = app.engine.compiled.triggers["A"].reps
+    t_reps = {k: v for k, v in reps.items() if k.startswith("T")}
+    if expect_dense:
+        assert all(v == "dense" for v in t_reps.values())
+    else:
+        assert all(v == "lowrank" for v in t_reps.values())
+    app.initialize(GeneralIterative.synthesize(48, p_dim))
+    u = np.zeros((48, 1), np.float32)
+    u[2] = 1.0
+    v = (rng.normal(size=(48, 1)) * 0.1).astype(np.float32)
+    a = app.update(jnp.asarray(u), jnp.asarray(v))
+    b = app.update_reeval(jnp.asarray(u), jnp.asarray(v))
+    assert _rel(a, b) < 1e-3
+
+
+def test_pagerank_maintains_distribution(rng):
+    app = PageRank(n=50, k=8, model="linear")
+    app.initialize(PageRank.synthesize(50, seed=3))
+    col = (rng.random(50) < 0.2).astype(np.float32)
+    col[7] = 0
+    col /= max(col.sum(), 1.0)
+    u, v = app.edge_update(7, col)
+    a = app.update(u, v)
+    b = app.update_reeval(u, v)
+    assert _rel(a, b) < 1e-3
+    assert abs(float(jnp.sum(a)) - 1.0) < 1e-2  # still ~a distribution
+
+
+def test_bgd_converges_and_matches(rng):
+    m, n, p = 64, 16, 4
+    app = BatchGradientDescent(m, n, p, k=16, eta=0.05, model="linear")
+    inputs = BatchGradientDescent.synthesize(m, n, p)
+    app.initialize(inputs)
+    u, v = app.row_update(1, rng.normal(size=n) * 0.05)
+    a = app.update(u, v)
+    b = app.update_reeval(u, v)
+    assert _rel(a, b) < 1e-3
+    # after 16 GD steps the loss should be well below the zero-init loss
+    X, Y = np.asarray(inputs["X"]), np.asarray(inputs["Y"])
+    X = X + np.asarray(u) @ np.asarray(v).T
+    loss = np.mean((X @ np.asarray(a) - Y) ** 2)
+    assert loss < np.mean(Y ** 2) * 0.9
+
+
+def test_batch_updates_rank_k(rng):
+    """Table 4 setting: a batch of row updates applied as one rank-k
+    trigger firing equals applying them via re-evaluation."""
+    n = 40
+    app = MatrixPowers(n=n, k=8, model="exp", rank=8)
+    app.initialize(MatrixPowers.synthesize(n, seed=5))
+    stream = UpdateStream(n=n, m=n, zipf=2.0, scale=0.05, seed=6)
+    U, V = stream.batch(8)
+    a = app.update(jnp.asarray(U), jnp.asarray(V))
+    b = app.update_reeval(jnp.asarray(U), jnp.asarray(V))
+    assert _rel(a, b) < 1e-3

@@ -1,0 +1,114 @@
+"""Checkpoint manager: full + LINVIEW incremental-delta round trips,
+garbage collection keeps incremental bases alive, restart determinism."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.dist.checkpoint import CheckpointManager
+
+
+def _tree(rng, scale=1.0):
+    return {
+        "w1": jnp.asarray(rng.normal(size=(64, 48)) * scale, jnp.float32),
+        "nested": {"b": jnp.asarray(rng.normal(size=(48,)), jnp.float32)},
+        "step": jnp.asarray(7, jnp.int32),
+    }
+
+
+def test_full_roundtrip(tmp_path, rng):
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    t = _tree(rng)
+    mgr.save(10, t, blocking=True)
+    restored = mgr.restore(t)
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_incremental_roundtrip_low_rank_delta(tmp_path, rng):
+    """A genuinely low-rank change must round-trip near-exactly through
+    the factored incremental checkpoint."""
+    mgr = CheckpointManager(str(tmp_path), async_save=False,
+                            incremental_rank=4, full_every=100)
+    t = _tree(rng)
+    mgr.save(0, t, blocking=True)
+    u = rng.normal(size=(64, 2)).astype(np.float32)
+    v = rng.normal(size=(48, 2)).astype(np.float32)
+    t2 = dict(t)
+    t2["w1"] = t["w1"] + u @ v.T
+    path = mgr.save(1, t2, blocking=True)
+    # the step-1 file must be incremental (factored payload)
+    import json
+    with open(path + ".json") as f:
+        assert json.load(f)["kind"] == "incremental"
+    data = np.load(path + ".npz")
+    assert any(k.startswith("lr_p::") for k in data)
+    restored = mgr.restore(t2, step=1)
+    np.testing.assert_allclose(np.asarray(restored["w1"]),
+                               np.asarray(t2["w1"]), rtol=1e-4, atol=1e-4)
+
+
+def test_incremental_falls_back_on_high_rank_delta(tmp_path, rng):
+    mgr = CheckpointManager(str(tmp_path), async_save=False,
+                            incremental_rank=2, full_every=100,
+                            max_rel_err=0.05)
+    t = _tree(rng)
+    mgr.save(0, t, blocking=True)
+    t2 = dict(t)
+    t2["w1"] = t["w1"] + jnp.asarray(rng.normal(size=(64, 48)), jnp.float32)
+    path = mgr.save(1, t2, blocking=True)
+    data = np.load(path + ".npz")
+    # full-rank noise cannot be sketched at rank 2 → raw fallback
+    assert any(k.startswith("raw::") for k in data)
+    restored = mgr.restore(t2, step=1)
+    np.testing.assert_allclose(np.asarray(restored["w1"]),
+                               np.asarray(t2["w1"]), rtol=1e-5)
+
+
+def test_chained_incrementals(tmp_path, rng):
+    mgr = CheckpointManager(str(tmp_path), async_save=False,
+                            incremental_rank=4, full_every=4, keep=10)
+    t = _tree(rng)
+    trees = [t]
+    mgr.save(0, t, blocking=True)
+    cur = t
+    for step in range(1, 6):
+        u = rng.normal(size=(64, 1)).astype(np.float32) * 0.1
+        v = rng.normal(size=(48, 1)).astype(np.float32)
+        cur = dict(cur)
+        cur["w1"] = cur["w1"] + u @ v.T
+        mgr.save(step, cur, blocking=True)
+        trees.append(cur)
+    for step in (0, 2, 5):
+        restored = mgr.restore(trees[step], step=step)
+        np.testing.assert_allclose(np.asarray(restored["w1"]),
+                                   np.asarray(trees[step]["w1"]),
+                                   rtol=1e-3, atol=1e-3)
+
+
+def test_latest_step_and_gc(tmp_path, rng):
+    mgr = CheckpointManager(str(tmp_path), async_save=False, keep=2,
+                            full_every=1)
+    t = _tree(rng)
+    for s in range(6):
+        mgr.save(s, t, blocking=True)
+    assert mgr.latest_step() == 5
+    assert len(mgr.all_steps()) <= 2
+
+
+def test_train_state_roundtrip(tmp_path):
+    """Whole TrainState (params + opt) through the manager."""
+    from repro.configs import get_config
+    from repro.models import build_model
+    from repro.train.train_step import init_train_state
+    cfg = get_config("h2o-danube-1.8b").reduced()
+    model = build_model(cfg)
+    state = init_train_state(model, jax.random.PRNGKey(0))
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    mgr.save(3, state, blocking=True)
+    restored = mgr.restore(state)
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

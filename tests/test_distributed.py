@@ -1,0 +1,201 @@
+"""Distributed execution tests.
+
+These need >1 device, so each test body runs in a subprocess with
+``--xla_force_host_platform_device_count=8`` (smoke tests in this process
+must keep seeing 1 device).
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(body: str):
+    script = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import jax
+        import jax.numpy as jnp
+        import numpy as np
+        assert len(jax.devices()) == 8
+    """) + textwrap.dedent(body)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env.pop("XLA_FLAGS", None)
+    res = subprocess.run([sys.executable, "-c", script], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert res.returncode == 0, f"STDOUT:\n{res.stdout}\nSTDERR:\n{res.stderr}"
+    return res.stdout
+
+
+def test_distributed_ivm_trigger_matches_single_device():
+    """Paper §6: row-sharded trigger execution == single-device trigger."""
+    _run("""
+    from jax.sharding import Mesh
+    from repro.core import IncrementalEngine
+    from repro.core.iterative import matrix_powers
+    from repro.dist.ivm_shard import build_distributed_trigger
+
+    n, k = 64, 8
+    rng = np.random.default_rng(0)
+    A = jnp.asarray(rng.normal(size=(n, n)) / 8, jnp.float32)
+    u = jnp.asarray(rng.normal(size=(n, 1)) * .2, jnp.float32)
+    v = jnp.asarray(rng.normal(size=(n, 1)) * .2, jnp.float32)
+
+    prog = matrix_powers(k=k, n=n, model="exp")
+    eng = IncrementalEngine(prog, {"A": 1})
+    eng.initialize({"A": A})
+    views0 = {kk: vv for kk, vv in eng.views.items()}
+
+    mesh = jax.make_mesh((8,), ("rows",))
+    trig = eng.compiled.triggers["A"]
+    fn = build_distributed_trigger(trig, eng.program, mesh)
+    out = fn(views0, u, v)
+
+    eng.apply_update("A", u, v)
+    for name in ["A", "P2", "P4", "P8"]:
+        got = np.asarray(out[name])
+        want = np.asarray(eng.views[name])
+        scale = max(np.abs(want).max(), 1.0)
+        err = np.abs(got - want).max() / scale
+        assert err < 1e-4, (name, err)
+    print("dist IVM OK")
+    """)
+
+
+def test_distributed_reeval_matmul():
+    _run("""
+    from repro.dist.ivm_shard import distributed_reeval_matmul
+    mesh = jax.make_mesh((8,), ("rows",))
+    rng = np.random.default_rng(1)
+    A = jnp.asarray(rng.normal(size=(64, 64)), jnp.float32)
+    B = jnp.asarray(rng.normal(size=(64, 64)), jnp.float32)
+    fn = distributed_reeval_matmul(mesh)
+    np.testing.assert_allclose(np.asarray(fn(A, B)), np.asarray(A @ B),
+                               rtol=1e-4, atol=1e-4)
+    print("dist reeval OK")
+    """)
+
+
+def test_compressed_psum_reduces_like_mean_of_lowrank():
+    """The shard_map compressed all-reduce: psum of factors reconstructs
+    the mean gradient (exactly, when per-shard grads are rank-1 and share
+    the right subspace seed)."""
+    _run("""
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+    from repro.train import grad_compression as gc
+
+    mesh = jax.make_mesh((8,), ("data",))
+    rng = np.random.default_rng(2)
+    # same rank-1 gradient on every shard → compressed psum must equal it
+    u = rng.normal(size=(64, 1)).astype(np.float32)
+    v = rng.normal(size=(32, 1)).astype(np.float32)
+    g_local = u @ v.T
+    g_global = jnp.asarray(np.tile(g_local.reshape(1, 64, 32), (8, 1, 1))
+                           ).reshape(8 * 64, 32)
+    # treat leading dim as the sharded batch-of-grads: reshape inside
+    grads = {"w": jnp.asarray(g_local)}   # per-shard identical
+    state = gc.init_compression(grads, rank=2, min_dim=16)
+    out = gc.compressed_psum(mesh, "data", grads, state)
+    np.testing.assert_allclose(np.asarray(out["w"]), g_local,
+                               rtol=1e-3, atol=1e-3)
+    print("compressed psum OK")
+    """)
+
+
+def test_pjit_train_step_small_mesh():
+    """A reduced arch train step lowers AND RUNS on a (4, 2) mesh with the
+    production sharding rules (numerical, not just dry-run)."""
+    _run("""
+    from repro.configs import get_config
+    from repro.dist.sharding import use_sharding, tree_shardings, named_sharding
+    from repro.models import build_model
+    from repro.train.train_step import init_train_state, make_train_step
+
+    cfg = get_config("h2o-danube-1.8b").reduced()
+    model = build_model(cfg)
+    mesh = jax.make_mesh((4, 2), ("data", "model"))
+    with use_sharding(mesh):
+        state = init_train_state(model, jax.random.PRNGKey(0))
+        step = jax.jit(make_train_step(model))
+        batch = {"tokens": jnp.ones((8, 64), jnp.int32)}
+        state2, metrics = step(state, batch)
+        assert bool(jnp.isfinite(metrics["loss"])), metrics
+    print("pjit train OK", float(metrics["loss"]))
+    """)
+
+
+def test_moe_sharded_matches_local():
+    """The shard_map MoE path (EP) equals the single-device path."""
+    _run("""
+    import dataclasses
+    from repro.configs import get_config
+    from repro.dist.sharding import use_sharding
+    from repro.models import build_model
+
+    cfg = get_config("qwen3-moe-235b-a22b").reduced()
+    cfg = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (4, 32),
+                                          0, cfg.vocab)}
+    logits_local, _ = model.forward(params, batch)
+
+    mesh = jax.make_mesh((2, 4), ("data", "model"))  # 8 experts / 4 = 2 per shard
+    with use_sharding(mesh):
+        logits_sharded, _ = jax.jit(model.forward)(params, batch)
+    a = np.asarray(logits_local, np.float32)
+    b = np.asarray(logits_sharded, np.float32)
+    err = np.abs(a - b).max() / max(np.abs(a).max(), 1.0)
+    assert err < 5e-3, err
+    print("moe EP OK", err)
+    """)
+
+
+def test_elastic_remesh_checkpoint_reshard(tmp_path=None):
+    """Elastic scaling end-to-end: train on a (4,2) mesh, checkpoint,
+    'lose' half the data hosts, resume on a (2,2) sub-mesh with re-resolved
+    shardings — the checkpoint is mesh-independent."""
+    _run("""
+    import tempfile
+    from repro.configs import get_config
+    from repro.dist.checkpoint import CheckpointManager
+    from repro.dist.fault_tolerance import plan_mesh
+    from repro.dist.sharding import use_sharding
+    from repro.models import build_model
+    from repro.train.train_step import init_train_state, make_train_step
+
+    cfg = get_config("h2o-danube-1.8b").reduced()
+    model = build_model(cfg)
+    batch = {"tokens": jnp.ones((8, 64), jnp.int32)}
+    ckdir = tempfile.mkdtemp()
+
+    # phase 1: (4, 2) mesh
+    mesh1 = jax.make_mesh((4, 2), ("data", "model"))
+    with use_sharding(mesh1):
+        state = init_train_state(model, jax.random.PRNGKey(0))
+        step = jax.jit(make_train_step(model))
+        state, m1 = step(state, batch)
+    mgr = CheckpointManager(ckdir, async_save=False)
+    mgr.save(1, state, blocking=True)
+
+    # phase 2: 4 devices survive → plan a (2, 2) mesh, reshard on restore
+    shape, names = plan_mesh(4, 2)
+    assert shape == (2, 2)
+    mesh2 = jax.make_mesh(shape, names)
+    with use_sharding(mesh2):
+        fresh = init_train_state(model, jax.random.PRNGKey(0))
+        restored = mgr.restore(fresh, step=1)
+        step2 = jax.jit(make_train_step(model))
+        restored, m2 = step2(restored, batch)
+    assert bool(jnp.isfinite(m2["loss"])), m2
+    # the restored run continues from the same loss surface
+    assert abs(float(m2["loss"]) - float(m1["loss"])) < 2.0
+    print("elastic remesh OK", float(m1["loss"]), float(m2["loss"]))
+    """)

@@ -1,0 +1,118 @@
+"""Hypothesis property tests for the LINVIEW invariants.
+
+Invariants under random programs / shapes / update ranks:
+  P1  exactness: trigger-maintained views == re-evaluated views
+  P2  factored-rank bound: rank(ΔE) ≤ structural bound (2× per squaring)
+  P3  delta of a static expression is zero
+  P4  transpose duality: Δ(Eᵀ) == (ΔE)ᵀ numerically
+  P5  Woodbury == sequential Sherman–Morrison
+"""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (IncrementalEngine, LowRank, Program, ReevalEngine,
+                        add, derive, DeltaEnv, dim, matmul, scale, transpose,
+                        var)
+from repro.core.iterative import matrix_powers
+
+from conftest import assert_close
+
+
+dims = st.integers(min_value=4, max_value=24)
+ranks = st.integers(min_value=1, max_value=3)
+seeds = st.integers(min_value=0, max_value=2 ** 16)
+
+
+def _mats(seed, n, k):
+    rng = np.random.default_rng(seed)
+    A = jnp.asarray(rng.normal(size=(n, n)) / np.sqrt(n), dtype=jnp.float32)
+    u = jnp.asarray(rng.normal(size=(n, k)) * 0.2, dtype=jnp.float32)
+    v = jnp.asarray(rng.normal(size=(n, k)) * 0.2, dtype=jnp.float32)
+    return A, u, v
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=dims, k=ranks, seed=seeds,
+       model=st.sampled_from(["linear", "exp", "skip"]),
+       steps=st.integers(min_value=1, max_value=3))
+def test_p1_exactness_matrix_powers(n, k, seed, model, steps):
+    A, u, v = _mats(seed, n, k)
+    prog = matrix_powers(k=8, n=n, model=model, s=4)
+    inc = IncrementalEngine(prog, {"A": k})
+    ree = ReevalEngine(prog)
+    inc.initialize({"A": A})
+    ree.initialize({"A": A})
+    for _ in range(steps):
+        inc.apply_update("A", u, v)
+        ree.apply_update("A", u, v)
+    out = prog.output_names()[0]
+    ref = np.asarray(ree.views[out])
+    scale_ = max(np.abs(ref).max(), 1.0)
+    assert_close(np.asarray(inc.views[out]) / scale_, ref / scale_,
+                 rtol=5e-3, atol=5e-3)
+
+
+@settings(max_examples=30, deadline=None)
+@given(k=ranks, depth=st.integers(min_value=1, max_value=4))
+def test_p2_rank_growth_bound(k, depth):
+    n = 16
+    A = var("A", (n, n))
+    env = DeltaEnv()
+    env.deltas["A"] = LowRank.outer(var("u", (n, k)), var("v", (n, k)))
+    e = A
+    for _ in range(depth):
+        e = matmul(e, e)
+    d = derive(e, env)
+    assert isinstance(d, LowRank)
+    assert d.rank <= k * (2 ** depth)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=dims, k=ranks, seed=seeds)
+def test_p4_transpose_duality(n, k, seed):
+    A, u, v = _mats(seed, n, k)
+    env = DeltaEnv()
+    env.deltas["A"] = LowRank.outer(var("u", (n, k)), var("v", (n, k)))
+    Av = var("A", (n, n))
+    e = matmul(Av, transpose(Av))
+    d1 = derive(e, env)
+    d2 = derive(transpose(e), env)
+    vals = {"A": A, "u": u, "v": v}
+    from repro.core import evaluate
+
+    def val(d):
+        tot = 0.0
+        for l, r in zip(d.left, d.right):
+            tot = tot + evaluate(l, vals, {}) @ evaluate(r, vals, {}).T
+        return tot
+
+    assert_close(val(d1).T, val(d2), rtol=1e-3, atol=1e-3)
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=dims, k=st.integers(min_value=1, max_value=3), seed=seeds)
+def test_p5_woodbury_equals_sequential_sm(n, k, seed):
+    rng = np.random.default_rng(seed)
+    base = rng.normal(size=(n, n))
+    Z = jnp.asarray(base.T @ base + 4 * np.eye(n), dtype=jnp.float32)
+    W = jnp.linalg.inv(Z)
+    p = jnp.asarray(rng.normal(size=(n, k)) * 0.2, dtype=jnp.float32)
+    q = jnp.asarray(rng.normal(size=(n, k)) * 0.2, dtype=jnp.float32)
+    from repro.core import woodbury, sherman_morrison
+    w1 = woodbury(W, p, q)
+    w2 = W
+    for i in range(k):
+        w2 = sherman_morrison(w2, p[:, i], q[:, i])
+    assert_close(w1, w2, rtol=2e-3, atol=2e-3)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=dims, seed=seeds)
+def test_p3_static_zero(n, seed):
+    env = DeltaEnv()
+    env.deltas["A"] = LowRank.outer(var("u", (n, 1)), var("v", (n, 1)))
+    B = var("B", (n, n))
+    d = derive(add(matmul(B, B), scale(3.0, B)), env)
+    assert isinstance(d, LowRank) and d.is_zero()
