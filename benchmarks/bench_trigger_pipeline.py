@@ -1,0 +1,133 @@
+"""Batched trigger pipeline: per-update cost vs batch size T (§6 batching).
+
+For each program (OLS, matrix powers) and T ∈ {1, 4, 16, 64}, times a
+stream of T rank-1 updates applied
+
+  * sequentially — T trigger firings, each view swept T times, and
+  * batched      — factors stacked to rank T, ONE trigger firing, each
+                   view swept once (``IncrementalEngine.apply_updates``).
+
+Per-update time for the batched path must fall as T grows (amortized
+dispatch + single memory pass); results land in
+``BENCH_trigger_pipeline.json`` so the perf trajectory is tracked across
+PRs.  ``--quick`` runs a reduced sweep for the CI smoke budget.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+import time
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.apps.ols import build_ols_program
+from repro.core.iterative import matrix_powers
+from repro.core.runtime import IncrementalEngine
+from repro.data.updates import UpdateStream
+
+try:  # runnable both as a module and as a script
+    from .common import emit
+except ImportError:  # pragma: no cover
+    from common import emit
+
+
+def _make_updates(n: int, m: int, count: int, seed: int
+                  ) -> List[Tuple[np.ndarray, np.ndarray]]:
+    it = iter(UpdateStream(n=n, m=m, scale=0.01, seed=seed))
+    return [next(it) for _ in range(count)]
+
+
+def _time_best(fn, repeats: int, inner: int = 3) -> float:
+    """Min over ``repeats`` of the mean over ``inner`` consecutive calls.
+
+    The inner mean smooths single-call scheduler hiccups; the outer min
+    drops whole bad windows — CPU containers are noisy and the CI gate
+    asserts strict monotonicity in T.
+    """
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        for _ in range(inner):
+            fn()
+        best = min(best, (time.perf_counter() - t0) / inner)
+    return best
+
+
+def bench_program(name: str, build_program, inputs_fn, input_name: str,
+                  n: int, m: int, batch_sizes, repeats: int
+                  ) -> Dict[str, Dict[str, float]]:
+    out: Dict[str, Dict[str, float]] = {}
+    for t_batch in batch_sizes:
+        ups = _make_updates(n, m, t_batch, seed=13 + t_batch)
+
+        eng_seq = IncrementalEngine(build_program())
+        eng_seq.initialize(inputs_fn())
+        eng_bat = IncrementalEngine(build_program())
+        eng_bat.initialize(inputs_fn())
+
+        def seq():
+            for u, v in ups:
+                eng_seq.apply_update(input_name, jnp.asarray(u),
+                                     jnp.asarray(v))
+            jax.block_until_ready(eng_seq.views)
+
+        def bat():
+            eng_bat.apply_updates(input_name, ups)
+            jax.block_until_ready(eng_bat.views)
+
+        seq()  # jit warmup (per-update trigger)
+        bat()  # jit warmup (per-bucket trigger)
+        t_seq = _time_best(seq, repeats) / t_batch
+        t_bat = _time_best(bat, repeats) / t_batch
+        out[str(t_batch)] = {
+            "seq_us_per_update": t_seq * 1e6,
+            "batched_us_per_update": t_bat * 1e6,
+            "batch_speedup": t_seq / t_bat,
+        }
+        emit(f"trigger_pipeline_{name}_T{t_batch}", t_bat * 1e6,
+             f"seq_us={t_seq*1e6:.1f};speedup={t_seq/t_bat:.2f}x")
+    return out
+
+
+def ols_inputs(m: int, n: int):
+    rng = np.random.default_rng(0)
+    X = rng.normal(size=(m, n)).astype(np.float32)
+    Y = rng.normal(size=(m, 1)).astype(np.float32)
+    return {"X": jnp.asarray(X), "Y": jnp.asarray(Y)}
+
+
+def powers_inputs(n: int):
+    rng = np.random.default_rng(0)
+    A = (0.5 / np.sqrt(n)) * rng.normal(size=(n, n)).astype(np.float32)
+    return {"A": jnp.asarray(A)}
+
+
+def main(quick: bool = False):
+    n = 96 if quick else 128
+    batch_sizes = (1, 4, 16) if quick else (1, 4, 16, 64)
+    repeats = 3 if quick else 6
+    results = {
+        "config": {"n": n, "batch_sizes": list(batch_sizes),
+                   "repeats": repeats, "backend": jax.default_backend()},
+        "ols": bench_program(
+            "ols", lambda: build_ols_program(2 * n, n, 1),
+            lambda: ols_inputs(2 * n, n), "X",
+            2 * n, n, batch_sizes, repeats),
+        "matrix_powers": bench_program(
+            "matrix_powers",
+            lambda: matrix_powers(k=8, n=n, model="exp"),
+            lambda: powers_inputs(n), "A",
+            n, n, batch_sizes, repeats),
+    }
+    with open("BENCH_trigger_pipeline.json", "w") as f:
+        json.dump(results, f, indent=2)
+    print("wrote BENCH_trigger_pipeline.json")
+    return results
+
+
+if __name__ == "__main__":
+    main(quick="--quick" in sys.argv)

@@ -5,6 +5,14 @@ metric, §7) for REEVAL / INCR / HYBRID over a stream of rank-1 row
 updates, and prints ``name,us_per_call,derived`` CSV rows.  Sizes are
 scaled to the CPU container; the trends (not the absolute numbers) are
 what reproduce the paper's figures — EXPERIMENTS.md compares them.
+
+Batch-size sweep: ``bench_trigger_pipeline.py`` extends the per-update
+metric across batched trigger firings, sweeping T ∈ {1, 4, 16, 64}
+coalesced updates per firing for the OLS and matrix-powers programs
+(sequential vs ``IncrementalEngine.apply_updates``).  Per-update time
+must fall monotonically with T — each maintained view is swept once per
+*batch* instead of once per *update* — and the run emits
+``BENCH_trigger_pipeline.json`` so CI can track the perf trajectory.
 """
 
 from __future__ import annotations

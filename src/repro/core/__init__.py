@@ -11,13 +11,17 @@ Public API:
 from .expr import (Dim, Expr, ShapeError, Var, add, const, identity, inverse,
                    matmul, scale, sub, transpose, var, zero)
 from .program import Program, Statement, dim
-from .factored import DeltaRep, DenseDelta, HStack, LowRank
+from .factored import (DeltaRep, DenseDelta, HStack, LowRank,
+                       pad_factors_to_rank, recompress_factors,
+                       stack_update_arrays)
 from .delta import DeltaEnv, derive, IncrementalInverseError
 from .compiler import (Assign, CompiledProgram, Trigger, ViewUpdate,
-                       compile_program, extract_inverse_views)
+                       batch_bucket, compile_batched_trigger, compile_program,
+                       extract_inverse_views)
 from .codegen import build_evaluator, build_trigger_fn, evaluate
-from .runtime import IncrementalEngine, ReevalEngine, max_abs_diff
-from .cost import Cost, expr_cost, lowrank_cost
+from .runtime import EngineStats, IncrementalEngine, ReevalEngine, max_abs_diff
+from .cost import (Cost, batch_crossover_rank, batched_apply_cost,
+                   batched_strategy, expr_cost, lowrank_cost, recompress_cost)
 from .sherman_morrison import (sherman_morrison, sherman_morrison_delta,
                                woodbury, woodbury_delta)
 from . import iterative
@@ -27,12 +31,15 @@ __all__ = [
     "inverse", "matmul", "scale", "sub", "transpose", "var", "zero",
     "Program", "Statement", "dim",
     "DeltaRep", "DenseDelta", "HStack", "LowRank",
+    "pad_factors_to_rank", "recompress_factors", "stack_update_arrays",
     "DeltaEnv", "derive", "IncrementalInverseError",
     "Assign", "CompiledProgram", "Trigger", "ViewUpdate",
+    "batch_bucket", "compile_batched_trigger",
     "compile_program", "extract_inverse_views",
     "build_evaluator", "build_trigger_fn", "evaluate",
-    "IncrementalEngine", "ReevalEngine", "max_abs_diff",
-    "Cost", "expr_cost", "lowrank_cost",
+    "EngineStats", "IncrementalEngine", "ReevalEngine", "max_abs_diff",
+    "Cost", "batch_crossover_rank", "batched_apply_cost", "batched_strategy",
+    "expr_cost", "lowrank_cost", "recompress_cost",
     "sherman_morrison", "sherman_morrison_delta", "woodbury",
     "woodbury_delta", "iterative",
 ]

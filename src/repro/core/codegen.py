@@ -128,42 +128,78 @@ def _get_apply_fn(backend: str):
     if backend == "xla":
         return _apply_lowrank_xla
     if backend == "pallas":
+        # rank_update_batched subsumes the single-update case (a 2-D
+        # (n, k) factor pair is the T=1 stack), so every trigger apply —
+        # per-update or stacked batch — goes through the one-pass kernel.
         from repro.kernels import ops as rk_ops
-        return rk_ops.rank_update
+        return rk_ops.rank_update_batched
     raise ValueError(f"unknown apply backend {backend!r}")
+
+
+def trigger_touched_views(trigger: Trigger) -> Tuple[Tuple[str, ...],
+                                                     Tuple[str, ...]]:
+    """(written, read-only) view names a trigger actually touches.
+
+    ``written`` are the ``+=`` targets; ``read-only`` are views referenced
+    by the factor-block assigns but never updated.  Everything else in the
+    store is invisible to the trigger and must not cross the jit boundary.
+    """
+    local = {trigger.u_var.name, trigger.v_var.name}
+    local.update(a.name for a in trigger.assigns)
+    written = tuple(dict.fromkeys(up.view for up in trigger.updates))
+    read = set()
+    for a in trigger.assigns:
+        read |= set(a.expr.free_vars())
+    read -= local
+    read -= set(written)
+    return written, tuple(sorted(read))
 
 
 def build_trigger_fn(trigger: Trigger, program: Program,
                      binding: Optional[Dict[str, int]] = None,
                      jit: bool = True,
                      apply_backend: str = "xla",
-                     donate: bool = True) -> Callable[[Env, Array, Array], Env]:
-    """Stage a trigger into ``(views, U, V) -> new views``.
+                     donate: bool = False) -> Callable[[Env, Array, Array], Env]:
+    """Stage a trigger into ``(views, U, V) -> views``.
 
-    ``views`` must contain the input matrices and every maintained view.
-    The returned dict contains updated values for the affected entries and
-    passes through the rest.
+    ``views`` must contain the input matrices and every maintained view;
+    the dict is updated **in place** with the new values and returned.
+    Only the views the trigger touches cross the jit boundary — the
+    untouched rest of the store is never copied, traced, or dispatched
+    (the old implementation round-tripped the whole dict through XLA on
+    every firing).  With ``donate=True`` the written views' buffers are
+    donated, so the update is genuinely in-place on device; read-only
+    views are never donated (callers may hold references).
     """
     binding = dict(program.dims if binding is None else binding)
     apply_fn = _get_apply_fn(apply_backend)
+    written, read_only = trigger_touched_views(trigger)
 
-    def run(views: Env, u: Array, v: Array) -> Env:
-        env: Env = dict(views)
+    def core(written_vals: Tuple[Array, ...], read_vals: Tuple[Array, ...],
+             u: Array, v: Array) -> Tuple[Array, ...]:
+        env: Env = dict(zip(written, written_vals))
+        env.update(zip(read_only, read_vals))
         env[trigger.u_var.name] = u
         env[trigger.v_var.name] = v
         cache: Dict[int, Array] = {}
         for a in trigger.assigns:
             env[a.name] = evaluate(a.expr, env, binding, cache)
-        out = dict(views)
         for up in trigger.updates:
             if up.kind == "lowrank":
-                out[up.view] = apply_fn(env[up.view], env[up.u], env[up.v])
+                env[up.view] = apply_fn(env[up.view], env[up.u], env[up.v])
             else:
-                out[up.view] = env[up.view] + env[up.d]
-        return out
+                env[up.view] = env[up.view] + env[up.d]
+        return tuple(env[name] for name in written)
 
     if jit:
-        run = jax.jit(run, donate_argnums=(0,) if donate else ())
+        core = jax.jit(core, donate_argnums=(0,) if donate else ())
+
+    def run(views: Env, u: Array, v: Array) -> Env:
+        new_vals = core(tuple(views[n] for n in written),
+                        tuple(views[n] for n in read_only), u, v)
+        views.update(zip(written, new_vals))
+        return views
+
     return run
 
 

@@ -79,6 +79,10 @@ class CompiledProgram:
     triggers: Dict[str, Trigger]
     # statements after the auxiliary-view pass (what the runtime evaluates)
     statements: List[Statement] = field(default_factory=list)
+    # compile options, retained so batched triggers (compiled lazily per
+    # batch-size bucket) share the same derivation choices
+    force_rep: Optional[str] = None
+    sequential_sm: bool = False
 
 
 # ---------------------------------------------------------------------------
@@ -159,7 +163,46 @@ def compile_program(
             program, input_name, rank, views, binding,
             force_rep=force_rep, sequential_sm=sequential_sm)
     return CompiledProgram(program=program, triggers=triggers,
-                           statements=list(program.statements))
+                           statements=list(program.statements),
+                           force_rep=force_rep, sequential_sm=sequential_sm)
+
+
+# ---------------------------------------------------------------------------
+# batched triggers (§6 batching, one trigger firing per T-update batch)
+# ---------------------------------------------------------------------------
+
+
+def batch_bucket(rank: int) -> int:
+    """Static batch-size bucket: the next power of two ≥ rank.
+
+    Stacked batch factors are zero-padded up to the bucket rank, so one
+    jitted trigger per bucket serves every batch size in (bucket/2, bucket]
+    and the jit cache stays warm across ragged batches.
+    """
+    if rank < 1:
+        raise ValueError(f"rank must be ≥ 1, got {rank}")
+    return 1 << (rank - 1).bit_length()
+
+
+def compile_batched_trigger(compiled: CompiledProgram, input_name: str,
+                            rank: int) -> Trigger:
+    """Compile the trigger for a *stacked* batch of updates to one input.
+
+    A batch of T rank-k updates {(U_t, V_t)} is the single factored update
+    ``P Qᵀ`` with P = [U_1 … U_T], Q = [V_1 … V_T] (rank k·T), so the
+    derivation is identical to the per-update trigger at the stacked rank —
+    the entire batch flows through each maintained view in ONE pass.
+    Representation choice re-runs per rank: wide batches flip skinny views
+    to the dense/hybrid path exactly as §5.3 prescribes.
+    """
+    program = compiled.program  # already aux-extracted by compile_program
+    if input_name not in program.inputs:
+        raise KeyError(f"{input_name} is not an input of {program.name}")
+    views: Dict[int, Expr] = {id(st.expr): st.target
+                              for st in program.statements}
+    return _compile_trigger(
+        program, input_name, rank, views, dict(program.dims),
+        force_rep=compiled.force_rep, sequential_sm=compiled.sequential_sm)
 
 
 def _compile_trigger(program: Program, input_name: str, rank: int,

@@ -130,6 +130,71 @@ def dense_delta_cost(d: DenseDelta, binding: Dict[str, int]) -> Cost:
 
 
 # ---------------------------------------------------------------------------
+# batched-trigger cost model (§6 batching + §4.2 avalanche containment)
+# ---------------------------------------------------------------------------
+
+
+def batched_apply_cost(view_shape: Tuple[int, int], rank: int,
+                       batch: int) -> Cost:
+    """Cost of applying a T-batch of rank-k updates in ONE pass over M.
+
+    FLOPs match T sequential GERs (2·T·k·n·m) but M crosses memory once,
+    not T times — the batched kernel's roofline win.  Compare against
+    ``apply_update_cost`` called T times to see the T× byte saving.
+    """
+    n, m = view_shape
+    return Cost(2.0 * batch * rank * n * m,
+                ELT * (2 * n * m + batch * rank * (n + m)))
+
+
+def recompress_cost(n: int, m: int, stacked_rank: int) -> Cost:
+    """Thin-QR both stacked factors + SVD of the (K × K) core.
+
+    O((n + m)·K² + K³) — independent of the maintained views, so it pays
+    whenever it shaves enough rank off every subsequent view sweep.
+    """
+    K = stacked_rank
+    flops = 2.0 * (n + m) * K * K + 22.0 * K ** 3  # QR×2 + SVD + recombine
+    return Cost(flops, ELT * (2 * (n + m) * K + 4 * K * K))
+
+
+def batched_strategy(view_shape: Tuple[int, int], stacked_rank: int,
+                     compressed_rank: int, reeval_flops: float) -> str:
+    """Pick how to refresh one view under a stacked rank-K batch delta.
+
+    Returns one of:
+      * ``"stacked"``     — fire the rank-K batched trigger as-is;
+      * ``"recompress"``  — QR/SVD the factors down to ``compressed_rank``
+                            first (wins once K outgrows the numerical
+                            rank: compaction is view-size independent);
+      * ``"reeval"``      — recompute the view from scratch (wins past the
+                            crossover rank, the paper's §7 regime where
+                            INCR loses to REEVAL).
+    """
+    n, m = view_shape
+    stacked = batched_apply_cost(view_shape, stacked_rank, 1).flops
+    comp = (recompress_cost(n, m, stacked_rank).flops
+            + batched_apply_cost(view_shape, compressed_rank, 1).flops)
+    best, best_cost = "stacked", stacked
+    if comp < best_cost:
+        best, best_cost = "recompress", comp
+    if reeval_flops < best_cost:
+        best = "reeval"
+    return best
+
+
+def batch_crossover_rank(view_shape: Tuple[int, int],
+                         reeval_flops: float) -> int:
+    """Stacked rank beyond which re-evaluating the view beats the trigger.
+
+    Solves ``2·K·n·m ≥ reeval_flops`` for K — the §7 crossover where the
+    incremental strategy stops winning and the engine should fall back.
+    """
+    n, m = view_shape
+    return max(1, int(reeval_flops / (2.0 * n * m)))
+
+
+# ---------------------------------------------------------------------------
 # asymptotic (Table 2) reports — used for docs/EXPERIMENTS, not decisions
 # ---------------------------------------------------------------------------
 

@@ -298,3 +298,100 @@ class HStack(Expr):
 
     def __repr__(self) -> str:
         return "[" + " ".join(map(repr, self.blocks)) + "]"
+
+
+# ---------------------------------------------------------------------------
+# batched update streams (§4.2 avalanche containment across the batch dim)
+# ---------------------------------------------------------------------------
+#
+# A stream of T factored updates {(U_t, V_t)} to one input is itself a
+# factored delta with stacked blocks  P = [U_1 … U_T],  Q = [V_1 … V_T]:
+#
+#     Σ_t U_t V_tᵀ  =  P Qᵀ,      rank ≤ Σ_t k_t.
+#
+# The helpers below are *numeric* (host-side): they run at batch-flush
+# time, outside jit, so the resulting rank is a static Python int the
+# compiler can bucket triggers by.
+
+
+def stack_update_arrays(updates: Sequence[Tuple["np.ndarray", "np.ndarray"]]
+                        ) -> Tuple["np.ndarray", "np.ndarray"]:
+    """Stack T factored updates ``[(u_t, v_t)]`` into ``(P, Q)``.
+
+    Each ``u_t`` is (n, k_t), ``v_t`` is (m, k_t); 1-D vectors are treated
+    as rank-1 columns.  Returns float32 ``P: (n, K)``, ``Q: (m, K)`` with
+    ``K = Σ_t k_t``.
+    """
+    import numpy as np
+    if not updates:
+        raise ValueError("empty update batch")
+    us, vs = [], []
+    for u, v in updates:
+        u = np.asarray(u, dtype=np.float32)
+        v = np.asarray(v, dtype=np.float32)
+        if u.ndim == 1:
+            u = u[:, None]
+        if v.ndim == 1:
+            v = v[:, None]
+        if u.shape[1] != v.shape[1]:
+            raise ex.ShapeError(f"update rank mismatch: {u.shape} vs {v.shape}")
+        us.append(u)
+        vs.append(v)
+    return np.concatenate(us, axis=1), np.concatenate(vs, axis=1)
+
+
+def recompress_factors(P: "np.ndarray", Q: "np.ndarray",
+                       max_rank: Optional[int] = None,
+                       tol: float = 1e-7
+                       ) -> Tuple["np.ndarray", "np.ndarray"]:
+    """Re-compress a stacked factored delta ``P Qᵀ`` to minimal rank.
+
+    The paper's §4.2 avalanche containment applied across the batch
+    dimension: repeated stacking grows K = Σ k_t without bound, but the
+    *numerical* rank is often far smaller (e.g. Zipf-skewed row updates
+    that keep hitting the same rows).  Thin-QR both factors, SVD the small
+    (K × K) core, and truncate:
+
+        P = Q_p R_p,  Q = Q_q R_q,  R_p R_qᵀ = U Σ Vᵀ
+        P' = Q_p U_r Σ_r,   Q' = Q_q V_r        (rank r ≤ K)
+
+    Cost O((n + m) K² + K³) — independent of the view sizes the trigger
+    will touch, which is what makes compaction pay before a rank-K
+    trigger fires.  Singular values below ``tol · σ_max`` are dropped;
+    ``max_rank`` caps the result (lossy beyond the numerical rank).
+    """
+    import numpy as np
+    P = np.asarray(P, dtype=np.float32)
+    Q = np.asarray(Q, dtype=np.float32)
+    K = P.shape[1]
+    if K != Q.shape[1]:
+        raise ex.ShapeError(f"factor rank mismatch: {P.shape} vs {Q.shape}")
+    qp, rp = np.linalg.qr(P)           # (n, K), (K, K)
+    qq, rq = np.linalg.qr(Q)           # (m, K), (K, K)
+    uc, s, vct = np.linalg.svd(rp @ rq.T)
+    r = int(np.sum(s > tol * (s[0] if s.size else 0.0)))
+    r = max(1, r)
+    if max_rank is not None:
+        r = min(r, max_rank)
+    P2 = qp @ (uc[:, :r] * s[:r])      # (n, r)
+    Q2 = qq @ vct[:r].T                # (m, r)
+    return P2.astype(np.float32), Q2.astype(np.float32)
+
+
+def pad_factors_to_rank(P: "np.ndarray", Q: "np.ndarray", rank: int
+                        ) -> Tuple["np.ndarray", "np.ndarray"]:
+    """Zero-pad stacked factors (n, K) → (n, rank) for a static bucket.
+
+    Exact: zero columns contribute nothing to ``P Qᵀ``, and every trigger
+    delta rule is well-defined under them (the Woodbury capacitance gains
+    identity rows/cols, the Sherman–Morrison denominators become 1).
+    """
+    import numpy as np
+    K = P.shape[1]
+    if K > rank:
+        raise ValueError(f"cannot pad rank {K} down to {rank}")
+    if K == rank:
+        return P, Q
+    pad = ((0, 0), (0, rank - K))
+    return np.pad(P, pad), np.pad(Q, pad)
+

@@ -2,21 +2,26 @@
 
 The engine owns the compiled program, the jitted re-evaluator, and one
 jitted trigger per dynamic input.  ``apply_update`` fires a trigger;
-``reevaluate`` is the paper's baseline strategy for comparison/validation.
+``apply_updates`` coalesces a whole update stream into one batched trigger
+firing (stacked factors, §6 batching); ``reevaluate`` is the paper's
+baseline strategy for comparison/validation.
 """
 
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Callable, Dict, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from .codegen import build_evaluator, build_trigger_fn, trigger_flops
-from .compiler import CompiledProgram, compile_program
+from .compiler import (CompiledProgram, batch_bucket, compile_batched_trigger,
+                       compile_program)
+from .factored import (pad_factors_to_rank, recompress_factors,
+                       stack_update_arrays)
 from .program import Program
 
 Array = jax.Array
@@ -24,10 +29,25 @@ Array = jax.Array
 
 @dataclass
 class EngineStats:
-    updates_applied: int = 0
+    """Engine counters.
+
+    ``trigger_seconds`` only accumulates for *blocked* firings (an async
+    dispatch has no meaningful wall time), so per-update timings divide by
+    ``updates_timed`` — counting them against ``updates_applied`` silently
+    under-reports whenever any caller passes ``block=False``.
+    """
+
+    updates_applied: int = 0      # logical updates (a T-batch counts T)
+    triggers_fired: int = 0       # trigger firings (a T-batch counts 1)
+    updates_timed: int = 0        # logical updates included in trigger_seconds
     trigger_seconds: float = 0.0
+    batches_applied: int = 0
+    recompressions: int = 0
     reevals: int = 0
     reeval_seconds: float = 0.0
+
+    def per_update_seconds(self) -> float:
+        return self.trigger_seconds / max(self.updates_timed, 1)
 
 
 class IncrementalEngine:
@@ -39,18 +59,37 @@ class IncrementalEngine:
                  sequential_sm: bool = False,
                  apply_backend: str = "xla",
                  jit: bool = True,
-                 donate: bool = False):
+                 donate: bool = False,
+                 max_batch_rank: Optional[int] = None,
+                 recompress_tol: float = 1e-6,
+                 flush_size: int = 16,
+                 flush_age: float = 0.1):
         self.compiled: CompiledProgram = compile_program(
             program, update_ranks, force_rep=force_rep,
             sequential_sm=sequential_sm)
         self.program = self.compiled.program
         self.binding = dict(self.program.dims)
+        self._jit = jit
+        self._apply_backend = apply_backend
+        self._donate = donate
         self._evaluator = build_evaluator(self.program, self.binding, jit=jit)
         self._trigger_fns: Dict[str, Callable] = {
             name: build_trigger_fn(trig, self.program, self.binding, jit=jit,
                                    apply_backend=apply_backend, donate=donate)
             for name, trig in self.compiled.triggers.items()
         }
+        # batched triggers, keyed by (input, bucket rank); compiled lazily
+        # so only the buckets a workload actually hits pay compile time.
+        self._batched_triggers: Dict[Tuple[str, int], Callable] = {}
+        # batching policy: cap the stacked rank (QR/SVD re-compression past
+        # it) and the queue flush thresholds (size in stacked rank,
+        # staleness in seconds).
+        self.max_batch_rank = max_batch_rank
+        self.recompress_tol = recompress_tol
+        self.flush_size = flush_size
+        self.flush_age = flush_age
+        self._pending: Dict[str, List[Tuple[np.ndarray, np.ndarray]]] = {}
+        self._pending_since: Dict[str, float] = {}
         self.views: Dict[str, Array] = {}
         self.stats = EngineStats()
 
@@ -75,7 +114,120 @@ class IncrementalEngine:
         if block:
             jax.block_until_ready(self.views)
             self.stats.trigger_seconds += time.perf_counter() - t0
+            self.stats.updates_timed += 1
         self.stats.updates_applied += 1
+        self.stats.triggers_fired += 1
+        return self.views
+
+    # -- batched incremental path ---------------------------------------------
+    def apply_updates(self, input_name: str,
+                      updates: Sequence[Tuple[Array, Array]],
+                      block: bool = False) -> Dict[str, Array]:
+        """Apply a whole update stream ``[(u_1, v_1) … (u_T, v_T)]`` to one
+        input in a single batched trigger firing (§6 batching).
+
+        The factors are stacked into ``P = [u_1 … u_T]``, ``Q = [v_1 … v_T]``
+        (one rank-ΣkT update), optionally re-compressed when the stacked
+        rank exceeds ``max_batch_rank``, then zero-padded up to the next
+        power-of-two bucket so the per-bucket jit cache stays warm across
+        ragged batch sizes.  Every maintained view is swept ONCE per batch
+        instead of once per update — the whole point of the pipeline.
+        """
+        if input_name not in self.compiled.triggers:
+            raise KeyError(f"no trigger for input {input_name!r}; have "
+                           f"{sorted(self.compiled.triggers)}")
+        updates = list(updates)
+        if not updates:
+            return self.views
+        t_count = len(updates)
+        t0 = time.perf_counter()  # before stacking: host-side concat (and
+        # any device sync from jax-array factors) is part of the batch cost
+        P, Q = stack_update_arrays(updates)
+        if self.max_batch_rank is not None and P.shape[1] > self.max_batch_rank:
+            P, Q = recompress_factors(P, Q, max_rank=self.max_batch_rank,
+                                      tol=self.recompress_tol)
+            self.stats.recompressions += 1
+        bucket = batch_bucket(P.shape[1])
+        P, Q = pad_factors_to_rank(P, Q, bucket)
+        fn = self._batched_trigger_fn(input_name, bucket)
+        self.views = fn(self.views, jnp.asarray(P), jnp.asarray(Q))
+        if block:
+            jax.block_until_ready(self.views)
+            self.stats.trigger_seconds += time.perf_counter() - t0
+            self.stats.updates_timed += t_count
+        self.stats.updates_applied += t_count
+        self.stats.triggers_fired += 1
+        self.stats.batches_applied += 1
+        return self.views
+
+    def _batched_trigger_fn(self, input_name: str, bucket: int) -> Callable:
+        """The jitted trigger for (input, bucket), compiled on first use."""
+        key = (input_name, bucket)
+        fn = self._batched_triggers.get(key)
+        if fn is None:
+            base = self.compiled.triggers[input_name]
+            if bucket == base.rank:
+                fn = self._trigger_fns[input_name]
+            else:
+                trig = compile_batched_trigger(self.compiled, input_name,
+                                               bucket)
+                fn = build_trigger_fn(trig, self.program, self.binding,
+                                      jit=self._jit,
+                                      apply_backend=self._apply_backend,
+                                      donate=self._donate)
+            self._batched_triggers[key] = fn
+        return fn
+
+    # -- update queue (serving-path coalescing) --------------------------------
+    def enqueue_update(self, input_name: str, u: Array, v: Array
+                       ) -> Optional[Dict[str, Array]]:
+        """Queue ``input_name += u @ v.T`` for the next coalesced flush.
+
+        Flushes automatically once the pending stacked rank reaches
+        ``flush_size`` or the oldest queued update is older than
+        ``flush_age`` seconds; returns the refreshed views on flush, else
+        ``None`` (views are stale until the next :meth:`flush`).
+        """
+        if input_name not in self.compiled.triggers:
+            raise KeyError(f"no trigger for input {input_name!r}; have "
+                           f"{sorted(self.compiled.triggers)}")
+        u = np.asarray(u, dtype=np.float32)
+        v = np.asarray(v, dtype=np.float32)
+        q = self._pending.setdefault(input_name, [])
+        if not q:
+            self._pending_since[input_name] = time.perf_counter()
+        q.append((u, v))
+        return self.maybe_flush(input_name)
+
+    def pending_rank(self, input_name: str) -> int:
+        return sum(u.shape[1] if u.ndim == 2 else 1
+                   for u, _ in self._pending.get(input_name, ()))
+
+    def pending_age(self, input_name: str) -> float:
+        if not self._pending.get(input_name):
+            return 0.0
+        return time.perf_counter() - self._pending_since[input_name]
+
+    def maybe_flush(self, input_name: str) -> Optional[Dict[str, Array]]:
+        """Flush one input's queue if a size/staleness threshold tripped."""
+        if (self.pending_rank(input_name) >= self.flush_size
+                or self.pending_age(input_name) >= self.flush_age):
+            return self.flush(input_name)
+        return None
+
+    def flush(self, input_name: Optional[str] = None,
+              block: bool = False) -> Dict[str, Array]:
+        """Apply all pending updates (for one input, or every input)."""
+        names = [input_name] if input_name is not None else \
+            [n for n, q in self._pending.items() if q]
+        for name in names:
+            q = self._pending.get(name)
+            if q:
+                # apply before popping: if the trigger raises, the queue
+                # survives for a retry instead of silently vanishing
+                self.apply_updates(name, q, block=block)
+            self._pending.pop(name, None)
+            self._pending_since.pop(name, None)
         return self.views
 
     # -- baseline path ---------------------------------------------------------

@@ -19,7 +19,7 @@ from . import ref
 from .dual_matmul import dual_matmul_pallas
 from .flash_attention import flash_attention_pallas
 from .flash_decode import flash_decode_pallas
-from .rank_update import rank_update_pallas
+from .rank_update import rank_update_batched_pallas, rank_update_pallas
 
 VMEM_BUDGET = 12 * 1024 * 1024  # bytes we allow a kernel's working set
 
@@ -30,13 +30,41 @@ def _interpret_default(interpret: Optional[bool]) -> bool:
     return jax.default_backend() != "tpu"
 
 
+@functools.lru_cache(maxsize=4096)
+def _divisors(n: int) -> Tuple[int, ...]:
+    """Sorted divisors of n via O(√n) complement-pair enumeration."""
+    small, large = [], []
+    d = 1
+    while d * d <= n:
+        if n % d == 0:
+            small.append(d)
+            if d != n // d:
+                large.append(n // d)
+        d += 1
+    return tuple(small + large[::-1])
+
+
+@functools.lru_cache(maxsize=4096)
 def _pick_block(n: int, cap: int, align: int = 8) -> int:
-    """Largest divisor of n that is ≤ cap, preferring multiples of align."""
+    """Largest divisor of n that is ≤ cap, preferring multiples of align.
+
+    Runs on every kernel-wrapper call, so it enumerates divisors in O(√n)
+    (not the O(n) scan this replaced) and memoizes: repeated calls with the
+    warm jit cache cost a dict lookup.
+    """
     best = 1
-    for b in range(1, min(n, cap) + 1):
-        if n % b == 0 and (b % align == 0 or b == n or b < align):
+    for b in _divisors(n):
+        if b > cap:
+            break
+        if b % align == 0 or b == n or b < align:
             best = b
     return best
+
+
+def _shrink_block(n: int, b: int) -> int:
+    """Next divisor of n strictly below b (1 if none)."""
+    cands = [d for d in _divisors(n) if d < b]
+    return cands[-1] if cands else 1
 
 
 def rank_update(m: jax.Array, u: jax.Array, v: jax.Array,
@@ -54,6 +82,35 @@ def rank_update(m: jax.Array, u: jax.Array, v: jax.Array,
         return ref.rank_update(m, u, v)  # ragged fallback
     return rank_update_pallas(m, u, v, bm=bm, bn=bn,
                               interpret=_interpret_default(interpret))
+
+
+def rank_update_batched(m: jax.Array, u: jax.Array, v: jax.Array,
+                        interpret: Optional[bool] = None) -> jax.Array:
+    """``m + Σ_t u[t] @ v[t].T`` — T coalesced trigger applies, one pass.
+
+    u: (T, n, k), v: (T, p, k).  Accepts 2-D (n, k)/(p, k) factors as the
+    T=1 degenerate case.  The block picker budgets the full stacked panel
+    (T·k columns of U and V per tile) against VMEM.
+    """
+    if u.ndim == 2:
+        u = u[None]
+        v = v[None]
+    n, p = m.shape
+    t, _, k = u.shape
+    bm = _pick_block(n, 512)
+    bn = _pick_block(p, 512)
+    # tile bytes = 4*(bm*bn + T*k*(bm+bn)) ≤ budget; back off along the
+    # divisor lattice (plain halving can step off it and needlessly lose
+    # the kernel to the ragged fallback)
+    while 4 * (bm * bn + t * k * (bm + bn)) > VMEM_BUDGET and (bm > 1 or bn > 1):
+        if bm >= bn:
+            bm = _shrink_block(n, bm)
+        else:
+            bn = _shrink_block(p, bn)
+    if n % bm or p % bn:
+        return ref.rank_update_batched(m, u, v)  # ragged fallback
+    return rank_update_batched_pallas(m, u, v, bm=bm, bn=bn,
+                                      interpret=_interpret_default(interpret))
 
 
 def dual_matmul(a: jax.Array, u: jax.Array, v: jax.Array,

@@ -13,6 +13,12 @@ def rank_update(m: jax.Array, u: jax.Array, v: jax.Array) -> jax.Array:
     return m + u @ v.T
 
 
+def rank_update_batched(m: jax.Array, u: jax.Array, v: jax.Array) -> jax.Array:
+    """Oracle for kernels.rank_update_batched: ``m + Σ_t u[t] @ v[t].T``
+    with u: (T, n, k), v: (T, p, k)."""
+    return m + jnp.einsum("tnk,tpk->np", u, v)
+
+
 def dual_matmul(a: jax.Array, u: jax.Array, v: jax.Array
                 ) -> Tuple[jax.Array, jax.Array]:
     """Oracle for kernels.dual_matmul: ``(a @ u, a.T @ v)``."""

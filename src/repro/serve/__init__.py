@@ -1,6 +1,26 @@
-"""Serving substrate: batched decode engine + incremental logit views."""
+"""Serving substrate: batched decode engine + incremental logit views.
 
-from .engine import ServeEngine
+``IncrementalLogitView`` (pure LINVIEW-core) is always importable;
+``ServeEngine`` needs the model stack (``repro.models`` → ``repro.dist``)
+and degrades to a stub that raises on construction where that is not
+built yet (see ROADMAP).
+"""
+
+import importlib.util
+
 from .incremental_views import IncrementalLogitView
+
+if importlib.util.find_spec("repro.dist") is not None:
+    from .engine import ServeEngine
+else:  # repro.dist not built yet; any other ImportError propagates
+
+    class ServeEngine:  # type: ignore[no-redef]
+        """Unavailable: the model stack requires ``repro.dist``."""
+
+        def __init__(self, *args, **kwargs):
+            raise ImportError(
+                "ServeEngine requires repro.dist, which is not built yet "
+                "(see ROADMAP open items); IncrementalLogitView works "
+                "without it")
 
 __all__ = ["ServeEngine", "IncrementalLogitView"]

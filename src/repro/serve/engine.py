@@ -28,6 +28,7 @@ class ServeEngine:
     max_seq: int = 2048
     temperature: float = 0.0
     seed: int = 0
+    _logit_views: Dict[str, Any] = field(default_factory=dict, init=False)
 
     def __post_init__(self):
         cfg = self.model.cfg
@@ -70,6 +71,49 @@ class ServeEngine:
         self._rng, sub = jax.random.split(self._rng)
         return jax.random.categorical(sub, logits / self.temperature,
                                       axis=-1).astype(jnp.int32)
+
+    # -- incremental logit views (LINVIEW serving integration) ---------------
+    #
+    # Corpus-level views over model outputs (classifier scores, retrieval
+    # logits) are maintained incrementally under low-rank weight updates
+    # instead of re-encoding the corpus.  Hot-swap deltas are *queued* and
+    # coalesced: a burst of T adapter updates costs one batched trigger
+    # firing per view (one sweep over each logit matrix), not T.
+
+    def attach_logit_view(self, weight_path: str, view) -> None:
+        """Register an :class:`IncrementalLogitView` maintained for the
+        weight at ``weight_path`` (e.g. ``"lm_head"``)."""
+        from .incremental_views import IncrementalLogitView
+        if not IncrementalLogitView.covers(weight_path):
+            raise ValueError(
+                f"{weight_path!r} is behind a nonlinearity; its cached "
+                f"views cannot be maintained exactly — re-encode instead")
+        self._logit_views[weight_path] = view
+
+    def hot_swap(self, weight_path: str, u: jax.Array, v: jax.Array) -> bool:
+        """Route a low-rank weight delta ``W += u vᵀ`` to the *cached corpus
+        views* maintained for ``weight_path``.
+
+        This keeps the incremental logit views consistent with the new
+        weights; swapping the delta into the live decode params
+        (``self.params``) is the caller's job — param-tree layout is
+        model-family specific, and applying only one side would silently
+        diverge.  The delta is enqueued on the view attached at
+        ``weight_path``; the queue flushes when the size threshold trips
+        on enqueue, and the staleness threshold is enforced on the next
+        ``logits`` read (or an explicit :meth:`flush_views`).  Returns
+        True if this enqueue flushed the view (its logits are fresh now).
+        """
+        if weight_path not in self._logit_views:
+            raise KeyError(f"no logit view attached for {weight_path!r}; "
+                           f"have {sorted(self._logit_views)}")
+        return self._logit_views[weight_path].submit_head_update(u, v)
+
+    def flush_views(self) -> None:
+        """Force all pending hot-swap deltas into the maintained views —
+        call before serving reads that need exact logits."""
+        for view in self._logit_views.values():
+            view.flush()
 
     def generate(self, prompts: np.ndarray, max_new: int = 32,
                  stop_token: Optional[int] = None) -> np.ndarray:

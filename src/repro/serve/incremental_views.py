@@ -37,7 +37,9 @@ class IncrementalLogitView:
     with the frozen backbone); W: (p, d) output head (vocab or classes).
     """
 
-    def __init__(self, hidden: jax.Array, head: jax.Array, rank: int = 1):
+    def __init__(self, hidden: jax.Array, head: jax.Array, rank: int = 1,
+                 flush_size: int = 16, flush_age: float = 0.05,
+                 max_batch_rank: Optional[int] = None):
         m, d = hidden.shape
         p, d2 = head.shape
         assert d == d2
@@ -48,18 +50,53 @@ class IncrementalLogitView:
         prog.let("Y", matmul(H, transpose(W)))
         prog.outputs = ["Y"]
         prog.bind_dims(m=m, d=d, p=p)
-        self.engine = IncrementalEngine(prog, {"W": rank, "H": rank})
+        self.engine = IncrementalEngine(
+            prog, {"W": rank, "H": rank},
+            max_batch_rank=max_batch_rank,
+            flush_size=flush_size, flush_age=flush_age)
         self.engine.initialize({"H": jnp.asarray(hidden, jnp.float32),
                                 "W": jnp.asarray(head, jnp.float32)})
 
     @property
     def logits(self) -> jax.Array:
+        # read-path staleness bound: flush pending deltas that tripped the
+        # size/age thresholds (enqueue-only checking would let a lone
+        # queued delta go stale forever if no further updates arrive)
+        self.engine.maybe_flush("W")
         return self.engine.views["Y"]
 
     def update_head(self, u: jax.Array, v: jax.Array) -> jax.Array:
         """W += u vᵀ (u: (p, k) class/vocab side, v: (d, k))."""
         self.engine.apply_update("W", u, v)
         return self.logits
+
+    def update_head_batch(self, updates) -> jax.Array:
+        """Apply a stream of head updates ``[(u_t, v_t)]`` as ONE batched
+        trigger firing — the corpus logits Y are swept once per batch
+        instead of once per adapter delta."""
+        self.engine.apply_updates("W", updates)
+        return self.logits
+
+    def submit_head_update(self, u: jax.Array, v: jax.Array) -> bool:
+        """Serving-path contract: queue a head update for coalescing.
+
+        Updates accumulate in the engine queue and flush as one batched
+        trigger when the stacked rank hits ``flush_size`` or the oldest
+        pending delta exceeds ``flush_age`` seconds.  Returns True if this
+        submission triggered a flush (logits are fresh), False if the
+        update is still pending (call :meth:`flush` before reading logits
+        with exactness requirements).
+        """
+        return self.engine.enqueue_update("W", u, v) is not None
+
+    def flush(self) -> jax.Array:
+        """Force all pending updates into the maintained logits."""
+        self.engine.flush()
+        return self.logits
+
+    @property
+    def pending_updates(self) -> int:
+        return self.engine.pending_rank("W")
 
     def add_items(self, u: jax.Array, v: jax.Array) -> jax.Array:
         """Corpus-side update H += u vᵀ (e.g. refreshed item embeddings

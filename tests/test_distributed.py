@@ -5,12 +5,14 @@ These need >1 device, so each test body runs in a subprocess with
 must keep seeing 1 device).
 """
 
+import pytest
+
+pytest.importorskip("repro.dist", reason="repro.dist is not built yet (see ROADMAP open items)")
+
 import os
 import subprocess
 import sys
 import textwrap
-
-import pytest
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 

@@ -1,10 +1,13 @@
 """Per-kernel shape/dtype sweeps against the pure-jnp oracles (ref.py),
 in interpret mode (kernel bodies execute on CPU)."""
 
+import pytest
+
+pytest.importorskip("hypothesis", reason="hypothesis is not installed in this container")
+
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.kernels import ops, ref

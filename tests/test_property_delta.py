@@ -8,6 +8,10 @@ Invariants under random programs / shapes / update ranks:
   P5  Woodbury == sequential Sherman–Morrison
 """
 
+import pytest
+
+pytest.importorskip("hypothesis", reason="hypothesis is not installed in this container")
+
 import jax.numpy as jnp
 import numpy as np
 from hypothesis import given, settings, strategies as st
