@@ -1,0 +1,1 @@
+"""Vendored micro-dependencies (containers here have no pip access)."""

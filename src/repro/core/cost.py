@@ -4,9 +4,12 @@ Counts FLOPs and bytes for symbolic expressions under a concrete dimension
 binding.  Hash-consing makes the count CSE-aware: a shared subexpression is
 priced once, the way the generated code evaluates it.
 
-``gamma`` parametrizes the matmul exponent O(n^γ) from §3 for *asymptotic*
-reports; actual FLOP counts use the classical 2·a·b·c since that is what
-BLAS/XLA executes (the paper makes the same practical assumption).
+The paper states asymptotics with a matmul exponent γ (O(n^γ), §3); the
+γ-form strings live only in the human-readable ``TABLE2`` report dict.
+All decision-making FLOP counts fix γ = 3 — the classical 2·a·b·c — since
+that is what BLAS/XLA executes (the paper makes the same practical
+assumption).  See docs/cost_model.md for the function-by-function map to
+the paper's cost expressions.
 """
 
 from __future__ import annotations

@@ -5,6 +5,11 @@ jitted trigger per dynamic input.  ``apply_update`` fires a trigger;
 ``apply_updates`` coalesces a whole update stream into one batched trigger
 firing (stacked factors, §6 batching); ``reevaluate`` is the paper's
 baseline strategy for comparison/validation.
+
+With ``mesh=`` the engine routes every trigger firing — per-update and
+batched — through the row-sharded apply (:mod:`repro.dist.ivm_shard`):
+views are placed row-sharded at initialize time and each firing is the
+§6 distributed trigger, numerically identical to the single-device path.
 """
 
 from __future__ import annotations
@@ -63,7 +68,22 @@ class IncrementalEngine:
                  max_batch_rank: Optional[int] = None,
                  recompress_tol: float = 1e-6,
                  flush_size: int = 16,
-                 flush_age: float = 0.1):
+                 flush_age: float = 0.1,
+                 flush_policy: str = "fixed",
+                 mesh=None,
+                 mesh_axis: Optional[str] = None):
+        """``flush_policy`` picks how :meth:`enqueue_update` decides to
+        flush: ``"fixed"`` trips on the ``flush_size``/``flush_age``
+        thresholds; ``"cost"`` asks the §4/§7 cost model instead — the
+        queue flushes at the first stacked rank where
+        :func:`repro.core.cost.batched_strategy` stops answering
+        ``"stacked"`` for some maintained view (``flush_age`` remains as
+        the latency bound).  ``mesh`` routes every trigger firing through
+        the row-sharded distributed apply (``repro.dist.ivm_shard``);
+        ``mesh_axis`` names the row axis (default: the mesh's first).
+        """
+        if flush_policy not in ("fixed", "cost"):
+            raise ValueError(f"unknown flush_policy {flush_policy!r}")
         self.compiled: CompiledProgram = compile_program(
             program, update_ranks, force_rep=force_rep,
             sequential_sm=sequential_sm)
@@ -72,10 +92,11 @@ class IncrementalEngine:
         self._jit = jit
         self._apply_backend = apply_backend
         self._donate = donate
+        self.mesh = mesh
+        self.mesh_axis = mesh_axis
         self._evaluator = build_evaluator(self.program, self.binding, jit=jit)
         self._trigger_fns: Dict[str, Callable] = {
-            name: build_trigger_fn(trig, self.program, self.binding, jit=jit,
-                                   apply_backend=apply_backend, donate=donate)
+            name: self._build_trigger(trig)
             for name, trig in self.compiled.triggers.items()
         }
         # batched triggers, keyed by (input, bucket rank); compiled lazily
@@ -88,20 +109,40 @@ class IncrementalEngine:
         self.recompress_tol = recompress_tol
         self.flush_size = flush_size
         self.flush_age = flush_age
+        self.flush_policy = flush_policy
+        self._cost_flush_rank: Dict[str, int] = {}
         self._pending: Dict[str, List[Tuple[np.ndarray, np.ndarray]]] = {}
         self._pending_since: Dict[str, float] = {}
         self.views: Dict[str, Array] = {}
         self.stats = EngineStats()
 
+    def _build_trigger(self, trig) -> Callable:
+        """Single-device jitted trigger, or the row-sharded distributed
+        one when the engine was given a mesh."""
+        if self.mesh is not None:
+            from repro.dist.ivm_shard import build_distributed_trigger
+            return build_distributed_trigger(trig, self.program, self.mesh,
+                                             jit=self._jit,
+                                             axis=self.mesh_axis)
+        return build_trigger_fn(trig, self.program, self.binding,
+                                jit=self._jit,
+                                apply_backend=self._apply_backend,
+                                donate=self._donate)
+
     # -- lifecycle -----------------------------------------------------------
     def initialize(self, inputs: Dict[str, Array]) -> Dict[str, Array]:
-        """Full evaluation of the program; materializes every view."""
+        """Full evaluation of the program; materializes every view (placed
+        row-sharded when the engine runs on a mesh)."""
         missing = set(self.program.inputs) - set(inputs)
         if missing:
             raise KeyError(f"missing inputs: {sorted(missing)}")
         computed = self._evaluator(dict(inputs))
         self.views = {**{k: jnp.asarray(v) for k, v in inputs.items()},
                       **computed}
+        if self.mesh is not None:
+            from repro.dist.ivm_shard import shard_views
+            self.views = shard_views(self.views, self.mesh,
+                                     axis=self.mesh_axis)
         return dict(computed)
 
     # -- incremental path ------------------------------------------------------
@@ -171,10 +212,7 @@ class IncrementalEngine:
             else:
                 trig = compile_batched_trigger(self.compiled, input_name,
                                                bucket)
-                fn = build_trigger_fn(trig, self.program, self.binding,
-                                      jit=self._jit,
-                                      apply_backend=self._apply_backend,
-                                      donate=self._donate)
+                fn = self._build_trigger(trig)
             self._batched_triggers[key] = fn
         return fn
 
@@ -183,10 +221,12 @@ class IncrementalEngine:
                        ) -> Optional[Dict[str, Array]]:
         """Queue ``input_name += u @ v.T`` for the next coalesced flush.
 
-        Flushes automatically once the pending stacked rank reaches
-        ``flush_size`` or the oldest queued update is older than
-        ``flush_age`` seconds; returns the refreshed views on flush, else
-        ``None`` (views are stale until the next :meth:`flush`).
+        Flushes automatically per the engine's ``flush_policy`` —
+        ``"fixed"``: pending stacked rank reaches ``flush_size``;
+        ``"cost"``: the cost model's crossover (:meth:`cost_flush_rank`);
+        both: the oldest queued update is older than ``flush_age``
+        seconds.  Returns the refreshed views on flush, else ``None``
+        (views are stale until the next :meth:`flush`).
         """
         if input_name not in self.compiled.triggers:
             raise KeyError(f"no trigger for input {input_name!r}; have "
@@ -209,11 +249,57 @@ class IncrementalEngine:
         return time.perf_counter() - self._pending_since[input_name]
 
     def maybe_flush(self, input_name: str) -> Optional[Dict[str, Array]]:
-        """Flush one input's queue if a size/staleness threshold tripped."""
-        if (self.pending_rank(input_name) >= self.flush_size
-                or self.pending_age(input_name) >= self.flush_age):
+        """Flush one input's queue if the active policy says so.
+
+        ``"fixed"``: the stacked-rank/staleness thresholds.  ``"cost"``:
+        the cost model — flush at the first stacked rank where some
+        maintained view's :func:`~repro.core.cost.batched_strategy` stops
+        answering ``"stacked"`` (queueing past that point makes the
+        eventual sweep worse than re-evaluating the view, §7 crossover);
+        staleness still bounds latency.
+        """
+        if self.pending_age(input_name) >= self.flush_age:
+            return self.flush(input_name)
+        threshold = (self.cost_flush_rank(input_name)
+                     if self.flush_policy == "cost" else self.flush_size)
+        if self.pending_rank(input_name) >= threshold:
             return self.flush(input_name)
         return None
+
+    def _lowrank_view_costs(self, input_name: str
+                            ) -> List[Tuple[Tuple[int, int], float]]:
+        """(view shape, per-view reeval FLOPs) for every maintained view
+        the trigger updates in factored form (the input itself has no
+        re-evaluation expression and is excluded)."""
+        from .cost import expr_cost, shape_of
+        trig = self.compiled.triggers[input_name]
+        by_name = {s.target.name: s for s in self.program.statements}
+        out = []
+        for up in trig.updates:
+            st = by_name.get(up.view)
+            if up.kind != "lowrank" or st is None:
+                continue
+            shape = shape_of(st.target, self.binding)
+            reeval = expr_cost(st.expr, self.binding).flops
+            out.append((shape, reeval))
+        return out
+
+    def cost_flush_rank(self, input_name: str) -> int:
+        """The stacked rank at which the ``"cost"`` policy flushes: the
+        first K where ``batched_strategy(shape, K, K, reeval)`` stops
+        answering ``"stacked"`` for some maintained view, i.e. one past
+        the smallest §7 crossover (first integer K with
+        reeval_flops < 2·K·n·m).  Computed once per input and cached;
+        triggers with no factored views fall back to ``flush_size``.
+        """
+        cached = self._cost_flush_rank.get(input_name)
+        if cached is None:
+            firsts = [int(reeval / (2.0 * n * m)) + 1
+                      for (n, m), reeval
+                      in self._lowrank_view_costs(input_name)]
+            cached = min(firsts) if firsts else self.flush_size
+            self._cost_flush_rank[input_name] = cached
+        return cached
 
     def flush(self, input_name: Optional[str] = None,
               block: bool = False) -> Dict[str, Array]:

@@ -1,0 +1,40 @@
+"""repro.dist — the distributed runtime (paper §6, Data Partitioning).
+
+LINVIEW's parallelization argument: a factored trigger is a chain of
+(big × skinny) matmuls, so row-sharding the big views distributes every
+trigger firing with only O(n·k) factor traffic, while re-evaluation moves
+whole O(n²) matrices.  This package carries that argument end to end:
+
+  :mod:`~repro.dist.sharding`         mesh-aware placement: logical-axis
+                                      rules, ``use_sharding`` context,
+                                      ``shard`` constraints (the models
+                                      layer's annotations resolve here)
+  :mod:`~repro.dist.ivm_shard`        row-sharded execution of compiled
+                                      triggers + the re-eval baseline
+  :mod:`~repro.dist.checkpoint`       full + LINVIEW factored incremental
+                                      checkpoints (delta = P Qᵀ on disk)
+  :mod:`~repro.dist.fault_tolerance`  heartbeat failure detection,
+                                      straggler eviction, elastic mesh
+                                      replanning, supervised restarts
+
+See ``docs/dist.md`` for the architecture guide.
+"""
+
+from . import checkpoint, fault_tolerance, ivm_shard, sharding
+from .checkpoint import CheckpointManager
+from .fault_tolerance import (FaultToleranceConfig, FaultTolerantController,
+                              RunPhase, TrainingSupervisor, plan_mesh)
+from .ivm_shard import (build_distributed_trigger, distributed_reeval_matmul,
+                        shard_views)
+from .sharding import (ShardingCtx, current_ctx, named_sharding, resolve_spec,
+                       shard, tree_shardings, use_sharding)
+
+__all__ = [
+    "sharding", "ivm_shard", "checkpoint", "fault_tolerance",
+    "ShardingCtx", "current_ctx", "named_sharding", "resolve_spec",
+    "shard", "tree_shardings", "use_sharding",
+    "build_distributed_trigger", "distributed_reeval_matmul", "shard_views",
+    "CheckpointManager",
+    "FaultToleranceConfig", "FaultTolerantController", "RunPhase",
+    "TrainingSupervisor", "plan_mesh",
+]

@@ -1,0 +1,359 @@
+"""Checkpointing: full snapshots + LINVIEW factored incremental deltas.
+
+The LINVIEW idea applied to training state: between two nearby steps most
+large matrices change by a numerically low-rank delta (an optimizer step
+driven by low-rank gradients, an adapter hot-swap, a single retrained
+head row).  So instead of writing the full tree every time, the manager
+writes
+
+  * a **full** checkpoint every ``full_every`` steps (the *base*), and
+  * **incremental** checkpoints in between: per matrix leaf the delta
+    against the previous checkpoint is SVD-sketched to ``P Qᵀ`` with
+    rank ≤ ``incremental_rank``; if the truncation error exceeds
+    ``max_rel_err`` (the delta is genuinely high-rank) that leaf falls
+    back to a raw copy — the §5.3 hybrid choice, per leaf, on disk.
+
+On-disk format (see docs/dist.md):
+
+  ``ckpt_<step>.json``   manifest: kind (full|incremental), base_step,
+                         per-leaf entry {kind: full|lr|raw|same, shape,
+                         dtype}
+  ``ckpt_<step>.npz``    payload arrays keyed ``full::<leaf>``,
+                         ``lr_p::<leaf>`` + ``lr_q::<leaf>``,
+                         ``raw::<leaf>``
+
+Restore walks the chain: latest full base, then every incremental up to
+the requested step, applying ``leaf += P Qᵀ`` / replacements in order.
+Deltas are always computed against the *reconstructed* previous
+checkpoint (not the in-memory exact tree), so sketch truncation never
+compounds across a chain.
+
+Checkpoints are mesh-independent: leaves are fully gathered to host
+numpy on save, and on restore each leaf is ``device_put`` to the
+template leaf's sharding — restoring onto a smaller mesh after an
+elastic resize needs no extra machinery.
+
+Garbage collection keeps the last ``keep`` checkpoints *plus any base a
+kept incremental (transitively) depends on* — an incremental whose base
+was collected would be unrestorable.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import threading
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+FORMAT_VERSION = 1
+_PREFIX = "ckpt_"
+
+
+def _leaf_paths(tree: Any) -> List[Tuple[str, Any]]:
+    """Stable (path-string, leaf) pairs; path is the tree address."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return [(jax.tree_util.keystr(kp), leaf) for kp, leaf in flat]
+
+
+def _to_host(leaf: Any) -> np.ndarray:
+    # np.array (not asarray): the snapshot must OWN its buffer.  asarray
+    # aliases numpy leaves (and can alias a donated device buffer on
+    # CPU), which would let the training loop mutate a checkpoint that
+    # save() already returned from, and would make the incremental
+    # "same"-detection compare a buffer against itself.
+    x = np.array(leaf)
+    if x.dtype.kind not in "fiub" or x.dtype.itemsize == 0:
+        # non-native dtypes (bfloat16 via ml_dtypes): stage as float32;
+        # the manifest remembers the real dtype and restore casts back.
+        x = x.astype(np.float32)
+    return x
+
+
+def _storage_dtype(x: np.ndarray) -> np.ndarray:
+    return x if x.dtype.kind in "fiub" else x.astype(np.float32)
+
+
+class CheckpointManager:
+    """Save/restore pytrees with optional factored incremental deltas.
+
+    Parameters
+    ----------
+    directory:          where ``ckpt_*.json`` / ``ckpt_*.npz`` live.
+    async_save:         write payloads on a background thread; ``save``
+                        returns after the host snapshot (the state can
+                        keep training).  ``blocking=True`` per call (or
+                        :meth:`wait`) forces completion.
+    keep:               GC budget — newest ``keep`` checkpoints survive,
+                        plus the bases their chains need.
+    incremental_rank:   rank cap for factored deltas; ``None`` disables
+                        incremental checkpoints entirely (always full).
+    full_every:         steps between full bases; an incremental is
+                        written only while ``step - last_full < full_every``.
+    max_rel_err:        Frobenius-relative truncation error above which a
+                        leaf's delta abandons the sketch and stores raw.
+    min_dim:            matrix leaves smaller than this on either side
+                        are never sketched (factors would not pay).
+    """
+
+    def __init__(self, directory: str, *, async_save: bool = True,
+                 keep: int = 5, incremental_rank: Optional[int] = None,
+                 full_every: int = 10, max_rel_err: float = 1e-3,
+                 min_dim: int = 8):
+        self.directory = directory
+        os.makedirs(directory, exist_ok=True)
+        self.keep = keep
+        self.incremental_rank = incremental_rank
+        self.full_every = full_every
+        self.max_rel_err = max_rel_err
+        self.min_dim = min_dim
+        self._executor = (ThreadPoolExecutor(max_workers=1,
+                                             thread_name_prefix="ckpt")
+                          if async_save else None)
+        self._inflight: Optional[Future] = None
+        self._lock = threading.Lock()
+        # reconstructed value of the last checkpoint on disk (path → np);
+        # incremental deltas diff against THIS, so sketch truncation does
+        # not compound along a chain.
+        self._base: Optional[Dict[str, np.ndarray]] = None
+        self._base_step: Optional[int] = None
+        self._last_full: Optional[int] = None
+
+    # -- paths / listing -----------------------------------------------------
+    def _path(self, step: int) -> str:
+        return os.path.join(self.directory, f"{_PREFIX}{step:08d}")
+
+    def all_steps(self) -> List[int]:
+        """Steps with a complete (manifest present) checkpoint, sorted."""
+        self.wait()
+        steps = []
+        for name in os.listdir(self.directory):
+            if name.startswith(_PREFIX) and name.endswith(".json"):
+                try:
+                    steps.append(int(name[len(_PREFIX):-len(".json")]))
+                except ValueError:
+                    continue
+        return sorted(steps)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def wait(self) -> None:
+        """Block until any in-flight async save has hit the disk."""
+        if self._inflight is not None:
+            self._inflight.result()
+            self._inflight = None
+
+    # -- save ---------------------------------------------------------------
+    def save(self, step: int, tree: Any, blocking: bool = False) -> str:
+        """Write ``tree`` as checkpoint ``step``; returns the path prefix
+        (manifest at ``<path>.json``, payload at ``<path>.npz``)."""
+        self.wait()
+        host: Dict[str, np.ndarray] = {}
+        dtypes: Dict[str, str] = {}
+        for p, x in _leaf_paths(tree):
+            dtypes[p] = str(x.dtype if hasattr(x, "dtype")
+                            else np.asarray(x).dtype)
+            host[p] = _to_host(x)
+        path = self._path(step)
+
+        incremental = (
+            self.incremental_rank is not None
+            and self._base is not None
+            and self._base_step is not None
+            and self._last_full is not None
+            and step - self._last_full < self.full_every
+            and set(self._base) == set(host)
+        )
+        if incremental:
+            payload, manifest, recon = self._encode_incremental(
+                step, host, dtypes)
+        else:
+            payload = {f"full::{p}": _storage_dtype(x)
+                       for p, x in host.items()}
+            manifest = {"format_version": FORMAT_VERSION, "kind": "full",
+                        "step": step, "base_step": None,
+                        "leaves": {p: {"kind": "full",
+                                       "shape": list(host[p].shape),
+                                       "dtype": dtypes[p]}
+                                   for p in host}}
+            recon = host
+            self._last_full = step
+
+        self._base = recon
+        self._base_step = step
+
+        def write():
+            with self._lock:
+                np.savez(path + ".npz", **payload)
+                with open(path + ".json", "w") as f:
+                    json.dump(manifest, f, indent=1)
+                self._gc()
+
+        if self._executor is not None and not blocking:
+            self._inflight = self._executor.submit(write)
+        else:
+            write()
+        return path
+
+    def _encode_incremental(self, step: int, host: Dict[str, np.ndarray],
+                            dtypes: Dict[str, str]):
+        payload: Dict[str, np.ndarray] = {}
+        leaves: Dict[str, Dict] = {}
+        recon: Dict[str, np.ndarray] = {}
+        rank = int(self.incremental_rank)
+        for p, new in host.items():
+            base = self._base[p]
+            entry = {"shape": list(new.shape), "dtype": dtypes[p]}
+            if new.shape == base.shape and np.array_equal(new, base):
+                entry["kind"] = "same"
+                recon[p] = base
+            elif (new.ndim == 2 and new.shape == base.shape
+                    and min(new.shape) >= max(self.min_dim, rank + 1)):
+                delta = (new.astype(np.float32)
+                         - base.astype(np.float32))
+                P, Q, rel = _sketch_delta(delta, rank)
+                if rel <= self.max_rel_err:
+                    entry["kind"] = "lr"
+                    payload[f"lr_p::{p}"] = P
+                    payload[f"lr_q::{p}"] = Q
+                    recon[p] = (base.astype(np.float32)
+                                + P @ Q.T).astype(base.dtype)
+                else:
+                    entry["kind"] = "raw"
+                    payload[f"raw::{p}"] = _storage_dtype(new)
+                    recon[p] = new
+            else:
+                entry["kind"] = "raw"
+                payload[f"raw::{p}"] = _storage_dtype(new)
+                recon[p] = new
+            leaves[p] = entry
+        manifest = {"format_version": FORMAT_VERSION, "kind": "incremental",
+                    "step": step, "base_step": self._base_step,
+                    "leaves": leaves}
+        return payload, manifest, recon
+
+    # -- restore ------------------------------------------------------------
+    def _manifest(self, step: int) -> Dict:
+        with open(self._path(step) + ".json") as f:
+            return json.load(f)
+
+    def _chain(self, step: int) -> List[Dict]:
+        """Manifests from the full base (first) up to ``step`` (last)."""
+        chain = []
+        s: Optional[int] = step
+        while True:
+            if s is None:
+                raise FileNotFoundError(
+                    f"broken incremental chain below step {step} in "
+                    f"{self.directory}")
+            man = self._manifest(s)
+            chain.append(man)
+            if man["kind"] == "full":
+                return list(reversed(chain))
+            s = man["base_step"]
+
+    def _reconstruct(self, step: int) -> Dict[str, np.ndarray]:
+        leaves: Dict[str, np.ndarray] = {}
+        for man in self._chain(step):
+            data = np.load(self._path(man["step"]) + ".npz")
+            if man["kind"] == "full":
+                leaves = {p: data[f"full::{p}"] for p in man["leaves"]}
+                continue
+            for p, info in man["leaves"].items():
+                if info["kind"] == "same":
+                    continue
+                if info["kind"] == "raw":
+                    leaves[p] = data[f"raw::{p}"]
+                else:  # lr: leaf += P Qᵀ
+                    base = leaves[p].astype(np.float32)
+                    leaves[p] = base + data[f"lr_p::{p}"] @ data[f"lr_q::{p}"].T
+        return leaves
+
+    def restore(self, template: Any, step: Optional[int] = None) -> Any:
+        """Rebuild checkpoint ``step`` (default: latest) shaped like
+        ``template``: same pytree structure; each leaf is cast to the
+        template leaf's dtype and placed on its sharding (so a restore
+        onto a re-planned mesh reshards transparently)."""
+        self.wait()
+        if step is None:
+            step = self.latest_step()
+            if step is None:
+                raise FileNotFoundError(
+                    f"no checkpoints in {self.directory}")
+        leaves = self._reconstruct(step)
+        flat, tdef = jax.tree_util.tree_flatten_with_path(template)
+        out = []
+        for kp, tleaf in flat:
+            p = jax.tree_util.keystr(kp)
+            if p not in leaves:
+                raise KeyError(f"checkpoint {step} has no leaf {p!r}")
+            val = np.asarray(leaves[p])
+            tarr = np.asarray(tleaf)
+            val = val.astype(tarr.dtype).reshape(tarr.shape)
+            sharding = getattr(tleaf, "sharding", None)
+            if isinstance(sharding, jax.sharding.NamedSharding):
+                # explicitly sharded template: reshard onto its mesh
+                out.append(jax.device_put(val, sharding))
+            else:
+                # leave uncommitted so a jit with in-body constraints can
+                # place it on whatever mesh is now active (elastic resize)
+                out.append(jax.numpy.asarray(val))
+        return jax.tree_util.tree_unflatten(tdef, out)
+
+    # -- GC -----------------------------------------------------------------
+    def _gc(self) -> None:
+        steps = []
+        for name in os.listdir(self.directory):
+            if name.startswith(_PREFIX) and name.endswith(".json"):
+                try:
+                    steps.append(int(name[len(_PREFIX):-len(".json")]))
+                except ValueError:
+                    continue
+        steps.sort()
+        retained = set(steps[-self.keep:]) if self.keep else set(steps)
+        # keep every base a retained incremental chain still needs
+        frontier = list(retained)
+        while frontier:
+            s = frontier.pop()
+            try:
+                man = self._manifest(s)
+            except FileNotFoundError:
+                continue
+            base = man.get("base_step")
+            if base is not None and base not in retained:
+                retained.add(base)
+                frontier.append(base)
+        for s in steps:
+            if s in retained:
+                continue
+            for suffix in (".json", ".npz"):
+                try:
+                    os.remove(self._path(s) + suffix)
+                except FileNotFoundError:
+                    pass
+
+
+def _sketch_delta(delta: np.ndarray, rank: int
+                  ) -> Tuple[np.ndarray, np.ndarray, float]:
+    """SVD-truncate ``delta`` to ``P Qᵀ`` with rank ≤ ``rank``.
+
+    Returns (P, Q, relative Frobenius truncation error).  The factored
+    payload is the LINVIEW representation: ``(n + m)·r`` floats instead
+    of ``n·m``.
+    """
+    u, s, vt = np.linalg.svd(delta, full_matrices=False)
+    total = float(np.sqrt(np.sum(s * s)))
+    if total == 0.0:
+        return (np.zeros((delta.shape[0], 0), np.float32),
+                np.zeros((delta.shape[1], 0), np.float32), 0.0)
+    r = min(rank, int(np.sum(s > 0)))
+    r = max(r, 1)
+    rel = float(np.sqrt(np.sum(s[r:] * s[r:]))) / total
+    P = (u[:, :r] * s[:r]).astype(np.float32)
+    Q = vt[:r].T.astype(np.float32)
+    return P, Q, rel

@@ -3,17 +3,38 @@
 A function, not a module constant: importing this module never touches
 jax device state (device count is locked at first backend init, and smoke
 tests must see 1 CPU device while the dry-run sees 512 placeholders).
+
+Shapes come from :func:`repro.dist.fault_tolerance.plan_mesh` so the
+launch path and the elastic-resize path (a supervisor replanning after an
+eviction) can never disagree about what a valid mesh looks like.
 """
 
 from __future__ import annotations
 
+from typing import Optional
+
 import jax
+
+from repro.dist.fault_tolerance import plan_mesh
+
+POD_CHIPS = 256
+MODEL_PARALLEL = 16
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16×16 single-pod (256 chips) or 2×16×16 multi-pod (512 chips)."""
-    shape = (2, 16, 16) if multi_pod else (16, 16)
-    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 2 * POD_CHIPS if multi_pod else POD_CHIPS
+    shape, axes = plan_mesh(n, MODEL_PARALLEL,
+                            multi_pod_size=POD_CHIPS if multi_pod else None)
+    return jax.make_mesh(shape, axes)
+
+
+def make_elastic_mesh(n_devices: int, model_parallel: int = MODEL_PARALLEL,
+                      multi_pod_size: Optional[int] = None):
+    """The mesh for however many devices survived — the supervisor calls
+    this after an eviction (e.g. 240 devices → (15, 16))."""
+    shape, axes = plan_mesh(n_devices, model_parallel,
+                            multi_pod_size=multi_pod_size)
     return jax.make_mesh(shape, axes)
 
 

@@ -115,6 +115,35 @@ class ServeEngine:
         for view in self._logit_views.values():
             view.flush()
 
+    # -- checkpoint hooks ----------------------------------------------------
+    def save_checkpoint(self, manager, step: int,
+                        blocking: bool = False) -> str:
+        """Snapshot the serving weights through a
+        :class:`repro.dist.checkpoint.CheckpointManager`.
+
+        Only ``params`` are persisted: decode caches are per-request
+        transients, and incremental logit views rebuild from the weights
+        they were attached with.  A stream of low-rank hot-swap deltas
+        between saves is exactly the workload the manager's factored
+        incremental checkpoints compress well.
+        """
+        return manager.save(step, self.params, blocking=blocking)
+
+    def restore_checkpoint(self, manager, step: Optional[int] = None
+                           ) -> "ServeEngine":
+        """Load weights from checkpoint ``step`` (default latest) and
+        reset all weight-derived serving state: the decode cache (KV
+        computed under the old weights must not leak into post-restore
+        requests) and any attached logit views (they may have absorbed
+        hot-swap deltas newer than the checkpoint and cannot be rolled
+        back — re-attach them against the restored weights; a stale
+        ``hot_swap`` call now raises instead of silently diverging)."""
+        self.params = manager.restore(self.params, step=step)
+        self.cache = self.model.init_cache(self.batch_size, self.max_seq)
+        self._pos = 0
+        self._logit_views.clear()
+        return self
+
     def generate(self, prompts: np.ndarray, max_new: int = 32,
                  stop_token: Optional[int] = None) -> np.ndarray:
         last = self.prefill(prompts)

@@ -56,7 +56,9 @@ def init_compression(params, rank: int = 4, min_dim: int = 128, seed: int = 0
         return (jnp.zeros(_matrix_shape(p), jnp.float32)
                 if _is_compressible(p, min_dim) else None)
 
-    q = jax.tree.map_with_path(lambda kp, p: q_init(str(kp), p), params)
+    # jax.tree.map_with_path only exists on newer jax; use the stable alias
+    q = jax.tree_util.tree_map_with_path(lambda kp, p: q_init(str(kp), p),
+                                         params)
     err = jax.tree.map(e_init, params)
     return CompressionState(q=q, err=err)
 
