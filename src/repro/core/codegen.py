@@ -203,6 +203,142 @@ def build_trigger_fn(trigger: Trigger, program: Program,
     return run
 
 
+# ---------------------------------------------------------------------------
+# planned trigger execution (repro.plan: per-view strategy in one firing)
+# ---------------------------------------------------------------------------
+
+
+def planned_trigger_sets(trigger: Trigger, program: Program,
+                         reeval_views=(), lazy_views=()):
+    """Partition a trigger's work under a maintenance plan.
+
+    ``reeval_views`` are re-evaluated from their defining statements
+    inside the firing (the §7 fallback for views whose delta lost to
+    recomputation); ``lazy_views`` are skipped entirely (unmaterialized
+    intermediates, recomputed on read) — unless a re-evaluated view's
+    statement reads them, in which case they are pulled into the
+    recompute closure so re-evaluation stays exact.
+
+    Returns ``(kept_assigns, kept_updates, recompute_stmts, skipped)``:
+    the dead-code-eliminated factor-block assigns and ``+=`` updates
+    that still run incrementally, the statements to re-evaluate in
+    program order, and the lazy views this firing leaves stale.
+    """
+    reeval = set(reeval_views)
+    lazy = set(lazy_views) - reeval
+    if trigger.input_name in reeval or trigger.input_name in lazy:
+        raise ValueError(
+            f"input {trigger.input_name!r} is the base fact: it cannot be "
+            f"re-evaluated or left unmaterialized")
+    kept_updates = [up for up in trigger.updates
+                    if up.view not in reeval and up.view not in lazy]
+    # recompute closure, discovered right-to-left: a lazy view is
+    # recomputed only if a later recomputed statement reads it
+    needed: set = set()
+    recompute_names: set = set()
+    for st in reversed(program.statements):
+        name = st.target.name
+        if name in reeval or (name in lazy and name in needed):
+            recompute_names.add(name)
+            needed |= set(st.expr.free_vars())
+    recompute = [st for st in program.statements
+                 if st.target.name in recompute_names]
+    skipped = tuple(sorted(lazy - recompute_names))
+    # assign DCE, same direction: keep only blocks the kept updates
+    # (transitively) reference
+    need: set = set()
+    for up in kept_updates:
+        need |= {x for x in (up.u, up.v, up.d) if x}
+    kept_assigns: List[Assign] = []
+    for a in reversed(trigger.assigns):
+        if a.name in need:
+            kept_assigns.append(a)
+            need |= set(a.expr.free_vars())
+    kept_assigns.reverse()
+    return kept_assigns, kept_updates, recompute, skipped
+
+
+def build_planned_trigger_fn(trigger: Trigger, program: Program,
+                             binding: Optional[Dict[str, int]] = None,
+                             *, reeval_views=(), lazy_views=(),
+                             jit: bool = True, apply_backend: str = "xla",
+                             donate: bool = False,
+                             constrain: Optional[Callable] = None,
+                             replicate: Optional[Callable] = None
+                             ) -> Callable[[Env, Array, Array], Env]:
+    """Stage one *planned* firing: incremental updates for the winning
+    views, in-firing re-evaluation for the losing ones, lazy skip for
+    unmaterialized intermediates — one XLA program, same ``(views, U,
+    V) -> views`` contract as :func:`build_trigger_fn`.
+
+    Execution order keeps the firing exact: factor blocks are evaluated
+    against *old* view values (the delta derivation's contract), the
+    surviving ``+=`` updates land, then re-evaluated statements are
+    recomputed **in program order** against the already-updated store —
+    every view ends at its exact post-update value either way.
+
+    ``constrain`` / ``replicate`` are sharding hooks for the
+    distributed path (:mod:`repro.dist.ivm_shard`); identity when None.
+    """
+    binding = dict(program.dims if binding is None else binding)
+    apply_fn = _get_apply_fn(apply_backend)
+    assigns, updates, recompute, skipped = planned_trigger_sets(
+        trigger, program, reeval_views, lazy_views)
+    written = tuple(dict.fromkeys(
+        [up.view for up in updates] + [st.target.name for st in recompute]))
+    local = {trigger.u_var.name, trigger.v_var.name}
+    local.update(a.name for a in assigns)
+    read: set = set()
+    for a in assigns:
+        read |= set(a.expr.free_vars())
+    for st in recompute:
+        read |= set(st.expr.free_vars())
+    read -= local
+    read -= set(written)
+    read_only = tuple(sorted(read))
+    cst = constrain if constrain is not None else (lambda x: x)
+    rep = replicate if replicate is not None else (lambda x: x)
+
+    def core(written_vals: Tuple[Array, ...], read_vals: Tuple[Array, ...],
+             u: Array, v: Array) -> Tuple[Array, ...]:
+        env: Env = {}
+        for name, val in zip(written + read_only,
+                             tuple(written_vals) + tuple(read_vals)):
+            env[name] = cst(val)
+        env[trigger.u_var.name] = rep(u)
+        env[trigger.v_var.name] = rep(v)
+        cache: Dict[int, Array] = {}
+        for a in assigns:
+            env[a.name] = evaluate(a.expr, env, binding, cache)
+        for up in updates:
+            if up.kind == "lowrank":
+                env[up.view] = cst(apply_fn(env[up.view], env[up.u],
+                                            env[up.v]))
+            else:
+                env[up.view] = cst(env[up.view] + env[up.d])
+        # fresh cache: the assign-phase cache holds pre-update values
+        rcache: Dict[int, Array] = {}
+        for st in recompute:
+            env[st.target.name] = cst(evaluate(st.expr, env, binding, rcache))
+        return tuple(env[name] for name in written)
+
+    if jit:
+        core = jax.jit(core, donate_argnums=(0,) if donate else ())
+
+    def run(views: Env, u: Array, v: Array) -> Env:
+        new_vals = core(tuple(views[n] for n in written),
+                        tuple(views[n] for n in read_only),
+                        jnp.asarray(u), jnp.asarray(v))
+        views.update(zip(written, new_vals))
+        return views
+
+    run.reeval_views = tuple(sorted(reeval_views))
+    run.recomputes = tuple(st.target.name for st in recompute)
+    run.skipped = skipped
+    run.incr_views = tuple(up.view for up in updates)
+    return run
+
+
 def trigger_flops(trigger: Trigger, program: Program,
                   binding: Optional[Dict[str, int]] = None) -> float:
     """Analytic FLOP count of one trigger firing (cost-model §3)."""

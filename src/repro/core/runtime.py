@@ -10,6 +10,16 @@ With ``mesh=`` the engine routes every trigger firing — per-update and
 batched — through the row-sharded apply (:mod:`repro.dist.ivm_shard`):
 views are placed row-sharded at initialize time and each firing is the
 §6 distributed trigger, numerically identical to the single-device path.
+
+With ``plan=`` (:mod:`repro.plan`) every firing executes a cost-based
+**maintenance plan**: per view, factored delta propagation while it
+wins, in-firing re-evaluation past the §7 crossover, a rank/staleness
+hybrid in between, and lazy (recompute-on-read) refresh for
+unmaterialized intermediates.  Compiled triggers are shared across
+engine instances through the plan trigger cache.  Engines with
+``flush_policy="cost"`` and no explicit plan still get the per-view
+re-evaluation fallback: a firing whose stacked rank puts some view past
+its crossover re-evaluates that view instead of sweeping it.
 """
 
 from __future__ import annotations
@@ -22,9 +32,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .codegen import build_evaluator, build_trigger_fn, trigger_flops
-from .compiler import (CompiledProgram, batch_bucket, compile_batched_trigger,
-                       compile_program)
+from .codegen import (build_evaluator, build_planned_trigger_fn,
+                      build_trigger_fn, evaluate, trigger_flops)
+from .compiler import (CompiledProgram, Trigger, batch_bucket,
+                       compile_batched_trigger, compile_program)
 from .factored import (pad_factors_to_rank, recompress_factors,
                        stack_update_arrays)
 from .program import Program
@@ -50,6 +61,9 @@ class EngineStats:
     recompressions: int = 0
     reevals: int = 0
     reeval_seconds: float = 0.0
+    plan_reevals: int = 0         # views re-evaluated inside planned firings
+    lazy_skips: int = 0           # unmaterialized views left stale by firings
+    replans: int = 0              # adaptive plan hot-swaps
 
     def per_update_seconds(self) -> float:
         return self.trigger_seconds / max(self.updates_timed, 1)
@@ -71,16 +85,30 @@ class IncrementalEngine:
                  flush_age: float = 0.1,
                  flush_policy: str = "fixed",
                  mesh=None,
-                 mesh_axis: Optional[str] = None):
+                 mesh_axis: Optional[str] = None,
+                 plan=None,
+                 trigger_cache=None):
         """``flush_policy`` picks how :meth:`enqueue_update` decides to
         flush: ``"fixed"`` trips on the ``flush_size``/``flush_age``
         thresholds; ``"cost"`` asks the §4/§7 cost model instead — the
         queue flushes at the first stacked rank where
         :func:`repro.core.cost.batched_strategy` stops answering
         ``"stacked"`` for some maintained view (``flush_age`` remains as
-        the latency bound).  ``mesh`` routes every trigger firing through
-        the row-sharded distributed apply (``repro.dist.ivm_shard``);
-        ``mesh_axis`` names the row axis (default: the mesh's first).
+        the latency bound), and the flushed firing re-evaluates any view
+        whose crossover the stacked rank did pass (the per-view
+        fallback; flushing early merely *bounds* how far past the
+        crossover a view can get).  ``mesh`` routes every trigger firing
+        through the row-sharded distributed apply
+        (``repro.dist.ivm_shard``); ``mesh_axis`` names the row axis
+        (default: the mesh's first).
+
+        ``plan`` attaches a :class:`repro.plan.MaintenancePlan` (or a
+        :class:`~repro.plan.WorkloadDescriptor` to plan here, or an
+        :class:`~repro.plan.AdaptivePlanner` for online re-planning);
+        planned engines share compiled triggers through
+        ``trigger_cache`` (default: the process-global
+        :func:`repro.plan.global_trigger_cache`), so a second engine
+        with an identical plan key never re-jits.
         """
         if flush_policy not in ("fixed", "cost"):
             raise ValueError(f"unknown flush_policy {flush_policy!r}")
@@ -95,13 +123,29 @@ class IncrementalEngine:
         self.mesh = mesh
         self.mesh_axis = mesh_axis
         self._evaluator = build_evaluator(self.program, self.binding, jit=jit)
+        # planned execution state (repro.plan)
+        self.plan = None
+        self.planner = None
+        self._cache_ns: Optional[Tuple] = None
+        self._trigger_cache = trigger_cache
+        self._accum_rank: Dict[str, int] = {}   # hybrid staleness counters
+        self._stale: set = set()                # lazy views awaiting refresh
+        self._view_costs: Dict[str, List[Tuple[str, Tuple[int, int], float]]] = {}
+        if plan is not None and trigger_cache is None:
+            from repro.plan import global_trigger_cache
+            self._trigger_cache = global_trigger_cache()
+        if plan is not None:
+            self._attach_plan(plan)
         self._trigger_fns: Dict[str, Callable] = {
-            name: self._build_trigger(trig)
+            name: self._cached_build(("base", name, trig.rank),
+                                     lambda trig=trig: self._build_trigger(trig))
             for name, trig in self.compiled.triggers.items()
         }
         # batched triggers, keyed by (input, bucket rank); compiled lazily
         # so only the buckets a workload actually hits pay compile time.
         self._batched_triggers: Dict[Tuple[str, int], Callable] = {}
+        self._bucket_trigger_ir: Dict[Tuple[str, int], Trigger] = {}
+        self._planned_fns: Dict[Tuple, Callable] = {}
         # batching policy: cap the stacked rank (QR/SVD re-compression past
         # it) and the queue flush thresholds (size in stacked rank,
         # staleness in seconds).
@@ -129,6 +173,190 @@ class IncrementalEngine:
                                 apply_backend=self._apply_backend,
                                 donate=self._donate)
 
+    # -- maintenance plans (repro.plan) ---------------------------------------
+    def _attach_plan(self, plan) -> None:
+        from repro.plan import AdaptivePlanner, WorkloadDescriptor
+        if isinstance(plan, WorkloadDescriptor):
+            from repro.plan import plan_for_engine
+            plan = plan_for_engine(self, plan)
+        if isinstance(plan, AdaptivePlanner):
+            self.planner = plan
+            plan = plan.bind(self.compiled, self.binding,
+                             mesh=self.mesh, mesh_axis=self.mesh_axis)
+        self.set_plan(plan)
+
+    def set_plan(self, plan) -> None:
+        """Hot-swap the maintenance plan.
+
+        Pending queues, hybrid staleness counters and lazy-view
+        staleness all survive the swap — a re-plan changes how future
+        firings refresh views, never the values they produce — so a
+        serving engine can adopt a re-plan mid-stream without dropping
+        its staleness contract.  Raises if the plan was priced for a
+        different (program, dims) fingerprint.
+        """
+        from repro.plan import global_trigger_cache, program_fingerprint
+        fp = program_fingerprint(self.program, self.binding)
+        if plan.fingerprint != fp:
+            raise ValueError(
+                f"plan fingerprint {plan.fingerprint} does not match this "
+                f"engine's program ({fp}); plans are not portable across "
+                f"program structures or dimension bindings")
+        if self._trigger_cache is None:
+            self._trigger_cache = global_trigger_cache()
+        self.plan = plan
+        if self.planner is not None and self.planner.plan is not plan:
+            # keep the attached adaptive planner's baseline in sync so
+            # its next drift check does not silently revert a hot-swap
+            self.planner.adopt(plan)
+
+    def _cache_key(self, tail: Tuple) -> Tuple:
+        if self._cache_ns is None:
+            from repro.plan import mesh_cache_key, program_fingerprint
+            self._cache_ns = (
+                program_fingerprint(self.program, self.binding),
+                self._apply_backend, self._jit, self._donate,
+                self.compiled.force_rep, self.compiled.sequential_sm,
+                mesh_cache_key(self.mesh, self.mesh_axis))
+        return self._cache_ns + tail
+
+    def _cached_build(self, tail: Tuple, builder: Callable) -> Callable:
+        """Build a trigger fn through the shared cache (identical plan
+        keys across engine instances reuse the jitted callable — no
+        re-trace, no re-compile)."""
+        if self._trigger_cache is None:
+            return builder()
+        return self._trigger_cache.get_or_build(self._cache_key(tail),
+                                                builder)
+
+    def _bucket_trigger(self, input_name: str, bucket: int) -> Trigger:
+        """The trigger IR for (input, stacked-rank bucket)."""
+        base = self.compiled.triggers[input_name]
+        if bucket == base.rank:
+            return base
+        key = (input_name, bucket)
+        trig = self._bucket_trigger_ir.get(key)
+        if trig is None:
+            trig = compile_batched_trigger(self.compiled, input_name, bucket)
+            self._bucket_trigger_ir[key] = trig
+        return trig
+
+    def _factored_view_costs(self, input_name: str
+                             ) -> List[Tuple[str, Tuple[int, int], float]]:
+        """(view, shape, reeval FLOPs) per factored-maintained view of
+        one trigger; cached per input (used on every cost-policy
+        firing)."""
+        cached = self._view_costs.get(input_name)
+        if cached is None:
+            from .cost import expr_cost, shape_of
+            trig = self.compiled.triggers[input_name]
+            by_name = {s.target.name: s for s in self.program.statements}
+            cached = []
+            for up in trig.updates:
+                st = by_name.get(up.view)
+                if up.kind != "lowrank" or st is None:
+                    continue
+                cached.append((up.view, shape_of(st.target, self.binding),
+                               expr_cost(st.expr, self.binding).flops))
+            self._view_costs[input_name] = cached
+        return cached
+
+    def _plan_decision(self, input_name: str, rank: int
+                       ) -> Tuple[frozenset, frozenset]:
+        """(views to re-evaluate, views to lazily skip) for a firing of
+        ``input_name`` at stacked rank ``rank``."""
+        if self.plan is not None:
+            reeval, lazy = self.plan.decide(rank, self._accum_rank)
+        elif self.flush_policy == "cost":
+            # planless cost-policy engines still get the per-view §7
+            # fallback: re-evaluate any view the stacked rank pushed
+            # past its crossover instead of sweeping it
+            from .cost import batched_strategy
+            reeval = frozenset(
+                name for name, shape, re in
+                self._factored_view_costs(input_name)
+                if batched_strategy(shape, rank, rank, re) == "reeval")
+            lazy = frozenset()
+        else:
+            return frozenset(), frozenset()
+        targets = {up.view for up in self.compiled.triggers[input_name].updates}
+        # keep the partition scoped to this trigger's targets, EXCEPT
+        # that a lazy view left stale by an earlier firing (possibly of
+        # a different input's trigger) must stay visible so the planned
+        # codegen pulls it into the recompute closure when a view
+        # re-evaluated here reads it — otherwise the in-firing reeval
+        # would silently consume the stale value
+        return reeval & targets, (lazy & targets) | (self._stale & lazy)
+
+    def _planned_trigger_fn(self, input_name: str, bucket: int,
+                            reeval: frozenset, lazy: frozenset) -> Callable:
+        key = (input_name, bucket, tuple(sorted(reeval)),
+               tuple(sorted(lazy)))
+        fn = self._planned_fns.get(key)
+        if fn is None:
+            fn = self._cached_build(
+                ("planned",) + key,
+                lambda: self._build_planned_trigger(input_name, bucket,
+                                                    reeval, lazy))
+            self._planned_fns[key] = fn
+        return fn
+
+    def _build_planned_trigger(self, input_name: str, bucket: int,
+                               reeval: frozenset, lazy: frozenset
+                               ) -> Callable:
+        trig = self._bucket_trigger(input_name, bucket)
+        if self.mesh is not None:
+            from repro.dist.ivm_shard import build_distributed_planned_trigger
+            return build_distributed_planned_trigger(
+                trig, self.program, self.mesh, reeval_views=reeval,
+                lazy_views=lazy, jit=self._jit, axis=self.mesh_axis)
+        return build_planned_trigger_fn(
+            trig, self.program, self.binding, reeval_views=reeval,
+            lazy_views=lazy, jit=self._jit,
+            apply_backend=self._apply_backend, donate=self._donate)
+
+    def _fire(self, input_name: str, bucket: int, P: Array, Q: Array) -> None:
+        """One (possibly planned) trigger firing at stacked rank
+        ``bucket``: partition views per the plan, execute, and keep the
+        hybrid/lazy bookkeeping current."""
+        reeval, lazy = self._plan_decision(input_name, bucket)
+        P, Q = jnp.asarray(P), jnp.asarray(Q)
+        if not reeval and not lazy:
+            fn = self._batched_trigger_fn(input_name, bucket)
+            self.views = fn(self.views, P, Q)
+            if self.plan is not None:
+                for up in self.compiled.triggers[input_name].updates:
+                    self._accum_rank[up.view] = \
+                        self._accum_rank.get(up.view, 0) + bucket
+            return
+        fn = self._planned_trigger_fn(input_name, bucket, reeval, lazy)
+        self.views = fn(self.views, P, Q)
+        recomputed = set(fn.recomputes)
+        # count only plan-DIRECTED re-evaluations; recomputed also holds
+        # lazy views pulled into the recompute closure for exactness
+        self.stats.plan_reevals += len(reeval)
+        self.stats.lazy_skips += len(fn.skipped)
+        self._stale |= set(fn.skipped)
+        self._stale -= recomputed
+        for name in fn.incr_views:
+            self._accum_rank[name] = self._accum_rank.get(name, 0) + bucket
+        for name in recomputed:
+            self._accum_rank[name] = 0
+
+    def refresh(self, block: bool = False) -> Dict[str, Array]:
+        """Recompute lazily-materialized views left stale by planned
+        firings (program order, so stale ancestors refresh first)."""
+        if not self._stale:
+            return self.views
+        for st in self.program.statements:
+            if st.target.name in self._stale:
+                self.views[st.target.name] = evaluate(st.expr, self.views,
+                                                      self.binding)
+        if block:
+            jax.block_until_ready(self.views)
+        self._stale.clear()
+        return self.views
+
     # -- lifecycle -----------------------------------------------------------
     def initialize(self, inputs: Dict[str, Array]) -> Dict[str, Array]:
         """Full evaluation of the program; materializes every view (placed
@@ -143,21 +371,29 @@ class IncrementalEngine:
             from repro.dist.ivm_shard import shard_views
             self.views = shard_views(self.views, self.mesh,
                                      axis=self.mesh_axis)
+        self._stale.clear()
+        self._accum_rank.clear()
         return dict(computed)
 
     # -- incremental path ------------------------------------------------------
     def apply_update(self, input_name: str, u: Array, v: Array,
                      block: bool = False) -> Dict[str, Array]:
-        """Fire the trigger for ``input_name += u @ v.T``."""
-        fn = self._trigger_fns[input_name]
+        """Fire the trigger for ``input_name += u @ v.T`` (executing the
+        engine's maintenance plan, when one is attached)."""
         t0 = time.perf_counter()
-        self.views = fn(self.views, jnp.asarray(u), jnp.asarray(v))
+        rank = self.compiled.triggers[input_name].rank
+        if self.plan is None and self.flush_policy != "cost":
+            fn = self._trigger_fns[input_name]
+            self.views = fn(self.views, jnp.asarray(u), jnp.asarray(v))
+        else:
+            self._fire(input_name, rank, u, v)
         if block:
             jax.block_until_ready(self.views)
             self.stats.trigger_seconds += time.perf_counter() - t0
             self.stats.updates_timed += 1
         self.stats.updates_applied += 1
         self.stats.triggers_fired += 1
+        self._observe_firing(input_name, rank, 1)
         return self.views
 
     # -- batched incremental path ---------------------------------------------
@@ -184,14 +420,14 @@ class IncrementalEngine:
         t0 = time.perf_counter()  # before stacking: host-side concat (and
         # any device sync from jax-array factors) is part of the batch cost
         P, Q = stack_update_arrays(updates)
+        stacked_rank = P.shape[1]
         if self.max_batch_rank is not None and P.shape[1] > self.max_batch_rank:
             P, Q = recompress_factors(P, Q, max_rank=self.max_batch_rank,
                                       tol=self.recompress_tol)
             self.stats.recompressions += 1
         bucket = batch_bucket(P.shape[1])
         P, Q = pad_factors_to_rank(P, Q, bucket)
-        fn = self._batched_trigger_fn(input_name, bucket)
-        self.views = fn(self.views, jnp.asarray(P), jnp.asarray(Q))
+        self._fire(input_name, bucket, P, Q)
         if block:
             jax.block_until_ready(self.views)
             self.stats.trigger_seconds += time.perf_counter() - t0
@@ -199,7 +435,20 @@ class IncrementalEngine:
         self.stats.updates_applied += t_count
         self.stats.triggers_fired += 1
         self.stats.batches_applied += 1
+        self._observe_firing(input_name, stacked_rank, t_count)
         return self.views
+
+    def _observe_firing(self, input_name: str, stacked_rank: int,
+                        t_count: int) -> None:
+        """Report one firing to the attached adaptive planner (both the
+        per-update and the batched path), adopting a re-plan if due."""
+        if self.planner is None:
+            return
+        self.planner.observe(input_name, stacked_rank, t_count)
+        new_plan = self.planner.maybe_replan()
+        if new_plan is not None:
+            self.set_plan(new_plan)
+            self.stats.replans += 1
 
     def _batched_trigger_fn(self, input_name: str, bucket: int) -> Callable:
         """The jitted trigger for (input, bucket), compiled on first use."""
@@ -210,9 +459,10 @@ class IncrementalEngine:
             if bucket == base.rank:
                 fn = self._trigger_fns[input_name]
             else:
-                trig = compile_batched_trigger(self.compiled, input_name,
-                                               bucket)
-                fn = self._build_trigger(trig)
+                fn = self._cached_build(
+                    ("batched", input_name, bucket),
+                    lambda: self._build_trigger(
+                        self._bucket_trigger(input_name, bucket)))
             self._batched_triggers[key] = fn
         return fn
 
@@ -254,9 +504,12 @@ class IncrementalEngine:
         ``"fixed"``: the stacked-rank/staleness thresholds.  ``"cost"``:
         the cost model — flush at the first stacked rank where some
         maintained view's :func:`~repro.core.cost.batched_strategy` stops
-        answering ``"stacked"`` (queueing past that point makes the
-        eventual sweep worse than re-evaluating the view, §7 crossover);
-        staleness still bounds latency.
+        answering ``"stacked"`` (the §7 crossover); staleness still
+        bounds latency.  Flushing at the crossover does NOT by itself
+        re-evaluate the losing view — it bounds the stacked rank; the
+        flushed firing then makes the per-view choice (:meth:`_fire`),
+        re-evaluating exactly the views the rank pushed past their
+        crossover and sweeping the rest.
         """
         if self.pending_age(input_name) >= self.flush_age:
             return self.flush(input_name)
@@ -271,18 +524,8 @@ class IncrementalEngine:
         """(view shape, per-view reeval FLOPs) for every maintained view
         the trigger updates in factored form (the input itself has no
         re-evaluation expression and is excluded)."""
-        from .cost import expr_cost, shape_of
-        trig = self.compiled.triggers[input_name]
-        by_name = {s.target.name: s for s in self.program.statements}
-        out = []
-        for up in trig.updates:
-            st = by_name.get(up.view)
-            if up.kind != "lowrank" or st is None:
-                continue
-            shape = shape_of(st.target, self.binding)
-            reeval = expr_cost(st.expr, self.binding).flops
-            out.append((shape, reeval))
-        return out
+        return [(shape, reeval) for _, shape, reeval
+                in self._factored_view_costs(input_name)]
 
     def cost_flush_rank(self, input_name: str) -> int:
         """The stacked rank at which the ``"cost"`` policy flushes: the
@@ -291,6 +534,9 @@ class IncrementalEngine:
         the smallest §7 crossover (first integer K with
         reeval_flops < 2·K·n·m).  Computed once per input and cached;
         triggers with no factored views fall back to ``flush_size``.
+        The firing this flush triggers re-evaluates any view actually
+        past its own crossover (per-view fallback) rather than sweeping
+        it at the losing rank.
         """
         cached = self._cost_flush_rank.get(input_name)
         if cached is None:
@@ -303,7 +549,11 @@ class IncrementalEngine:
 
     def flush(self, input_name: Optional[str] = None,
               block: bool = False) -> Dict[str, Array]:
-        """Apply all pending updates (for one input, or every input)."""
+        """Apply all pending updates (for one input, or every input).
+
+        The exactness point before a read: also recomputes any lazily
+        maintained views that planned firings left stale, so every view
+        in :attr:`views` is current when this returns."""
         names = [input_name] if input_name is not None else \
             [n for n, q in self._pending.items() if q]
         for name in names:
@@ -314,6 +564,8 @@ class IncrementalEngine:
                 self.apply_updates(name, q, block=block)
             self._pending.pop(name, None)
             self._pending_since.pop(name, None)
+        if self._stale:
+            self.refresh(block=block)
         return self.views
 
     # -- baseline path ---------------------------------------------------------
@@ -327,11 +579,15 @@ class IncrementalEngine:
             jax.block_until_ready(computed)
             self.stats.reeval_seconds += time.perf_counter() - t0
         self.views.update(computed)
+        self._stale.clear()
+        self._accum_rank.clear()
         self.stats.reevals += 1
         return dict(computed)
 
     # -- introspection -----------------------------------------------------------
     def output(self, name: Optional[str] = None) -> Array:
+        if self._stale:
+            self.refresh()
         name = name or self.program.output_names()[0]
         return self.views[name]
 

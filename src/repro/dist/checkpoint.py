@@ -47,6 +47,7 @@ from concurrent.futures import Future, ThreadPoolExecutor
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 FORMAT_VERSION = 1
@@ -59,13 +60,29 @@ def _leaf_paths(tree: Any) -> List[Tuple[str, Any]]:
     return [(jax.tree_util.keystr(kp), leaf) for kp, leaf in flat]
 
 
+def _stage(leaf: Any) -> Any:
+    """Caller-thread snapshot: an *owned* buffer the training loop can
+    no longer touch, at device-copy (not device-to-host) cost.
+
+    jax leaves get a device-side copy — dispatched asynchronously, never
+    aliasing the argument — so the caller may immediately donate the
+    original buffer to the next jitted step; the expensive D2H gather of
+    the copy happens later, on the writer thread.  Host leaves are
+    np.array-copied (asarray would alias: the loop could mutate a
+    checkpoint that save() already returned from, and the incremental
+    "same"-detection would compare a buffer against itself).
+    """
+    if isinstance(leaf, jax.Array):
+        return jnp.copy(leaf)
+    return np.array(leaf)
+
+
 def _to_host(leaf: Any) -> np.ndarray:
-    # np.array (not asarray): the snapshot must OWN its buffer.  asarray
-    # aliases numpy leaves (and can alias a donated device buffer on
-    # CPU), which would let the training loop mutate a checkpoint that
-    # save() already returned from, and would make the incremental
-    # "same"-detection compare a buffer against itself.
-    x = np.array(leaf)
+    # writer-thread side of the snapshot: gather the staged (owned)
+    # buffer to host numpy; this is the blocking D2H transfer.  Staged
+    # numpy leaves already own their buffer (_stage np.array-copied
+    # them), so only jax leaves pay a copy here.
+    x = np.asarray(leaf) if isinstance(leaf, np.ndarray) else np.array(leaf)
     if x.dtype.kind not in "fiub" or x.dtype.itemsize == 0:
         # non-native dtypes (bfloat16 via ml_dtypes): stage as float32;
         # the manifest remembers the real dtype and restore casts back.
@@ -83,10 +100,12 @@ class CheckpointManager:
     Parameters
     ----------
     directory:          where ``ckpt_*.json`` / ``ckpt_*.npz`` live.
-    async_save:         write payloads on a background thread; ``save``
-                        returns after the host snapshot (the state can
-                        keep training).  ``blocking=True`` per call (or
-                        :meth:`wait`) forces completion.
+    async_save:         gather + encode + write on a background thread;
+                        ``save`` returns after staging donation-safe
+                        device-side copies (the state can keep training,
+                        and may donate its buffers immediately).
+                        ``blocking=True`` per call (or :meth:`wait`)
+                        forces completion.
     keep:               GC budget — newest ``keep`` checkpoints survive,
                         plus the bases their chains need.
     incremental_rank:   rank cap for factored deltas; ``None`` disables
@@ -151,43 +170,52 @@ class CheckpointManager:
     # -- save ---------------------------------------------------------------
     def save(self, step: int, tree: Any, blocking: bool = False) -> str:
         """Write ``tree`` as checkpoint ``step``; returns the path prefix
-        (manifest at ``<path>.json``, payload at ``<path>.npz``)."""
+        (manifest at ``<path>.json``, payload at ``<path>.npz``).
+
+        The caller thread only *stages* the snapshot: one donation-safe
+        owned copy per leaf (device-side for jax arrays, dispatched
+        async).  The device-to-host gather, the full/incremental
+        encoding and the disk write all happen on the writer thread
+        when ``async_save`` — the training loop can donate its buffers
+        to the next step the moment this returns.  ``save`` waits for
+        any previous in-flight save first, so the writer-side encoder
+        state (``_base``/``_last_full``) is single-threaded.
+        """
         self.wait()
-        host: Dict[str, np.ndarray] = {}
+        staged: Dict[str, Any] = {}
         dtypes: Dict[str, str] = {}
         for p, x in _leaf_paths(tree):
             dtypes[p] = str(x.dtype if hasattr(x, "dtype")
                             else np.asarray(x).dtype)
-            host[p] = _to_host(x)
+            staged[p] = _stage(x)
         path = self._path(step)
 
-        incremental = (
-            self.incremental_rank is not None
-            and self._base is not None
-            and self._base_step is not None
-            and self._last_full is not None
-            and step - self._last_full < self.full_every
-            and set(self._base) == set(host)
-        )
-        if incremental:
-            payload, manifest, recon = self._encode_incremental(
-                step, host, dtypes)
-        else:
-            payload = {f"full::{p}": _storage_dtype(x)
-                       for p, x in host.items()}
-            manifest = {"format_version": FORMAT_VERSION, "kind": "full",
-                        "step": step, "base_step": None,
-                        "leaves": {p: {"kind": "full",
-                                       "shape": list(host[p].shape),
-                                       "dtype": dtypes[p]}
-                                   for p in host}}
-            recon = host
-            self._last_full = step
-
-        self._base = recon
-        self._base_step = step
-
-        def write():
+        def gather_encode_write():
+            host = {p: _to_host(x) for p, x in staged.items()}
+            incremental = (
+                self.incremental_rank is not None
+                and self._base is not None
+                and self._base_step is not None
+                and self._last_full is not None
+                and step - self._last_full < self.full_every
+                and set(self._base) == set(host)
+            )
+            if incremental:
+                payload, manifest, recon = self._encode_incremental(
+                    step, host, dtypes)
+            else:
+                payload = {f"full::{p}": _storage_dtype(x)
+                           for p, x in host.items()}
+                manifest = {"format_version": FORMAT_VERSION, "kind": "full",
+                            "step": step, "base_step": None,
+                            "leaves": {p: {"kind": "full",
+                                           "shape": list(host[p].shape),
+                                           "dtype": dtypes[p]}
+                                       for p in host}}
+                recon = host
+                self._last_full = step
+            self._base = recon
+            self._base_step = step
             with self._lock:
                 np.savez(path + ".npz", **payload)
                 with open(path + ".json", "w") as f:
@@ -195,9 +223,9 @@ class CheckpointManager:
                 self._gc()
 
         if self._executor is not None and not blocking:
-            self._inflight = self._executor.submit(write)
+            self._inflight = self._executor.submit(gather_encode_write)
         else:
-            write()
+            gather_encode_write()
         return path
 
     def _encode_incremental(self, step: int, host: Dict[str, np.ndarray],

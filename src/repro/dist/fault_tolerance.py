@@ -182,8 +182,11 @@ class TrainingSupervisor:
     + restart when the controller demands a reshape.
 
     ``run`` is runner-agnostic: the callables own the actual mesh and
-    state.  ``step_fn(step)`` executes one step and returns its duration;
-    ``save_fn(step)`` / ``restore_fn() -> step`` round-trip checkpoints;
+    state.  ``step_fn(step)`` executes one (0-based) step and returns its
+    duration; ``save_fn(completed)`` / ``restore_fn() -> completed``
+    round-trip checkpoints labeled by the number of completed steps —
+    ``restore_fn``'s return value is therefore the next step index to
+    run, so a restored step is never re-executed;
     ``reporting_fn(step) -> hosts`` stands in for the heartbeat transport
     (defaults to "every alive host reports").
     """
@@ -197,13 +200,16 @@ class TrainingSupervisor:
             step_fn: Callable[[int], float],
             save_fn: Callable[[int], None],
             restore_fn: Callable[[], int],
-            reporting_fn: Optional[Callable[[int], Sequence[int]]] = None
-            ) -> int:
-        """Run ``total_steps`` steps to completion; returns the number of
-        checkpoint restarts that were needed along the way."""
+            reporting_fn: Optional[Callable[[int], Sequence[int]]] = None,
+            start_step: int = 0) -> int:
+        """Run steps ``start_step..total_steps`` to completion; returns
+        the number of checkpoint restarts needed along the way.
+        ``start_step`` lets a driver resume a checkpointed run under the
+        same supervisor (the restore path already reports the restored
+        step; this is the cold-resume equivalent)."""
         ctl = self.controller
         restarts = 0
-        step = 0
+        step = start_step
         last_dur = 0.0
         while step < total_steps:
             hosts = (reporting_fn(step) if reporting_fn is not None
@@ -219,7 +225,7 @@ class TrainingSupervisor:
                 restarts += 1
                 step = restore_fn()
                 continue
-            if self.save_every and step and step % self.save_every == 0:
-                save_fn(step)
+            if self.save_every and (step + 1) % self.save_every == 0:
+                save_fn(step + 1)  # checkpoints are labeled by steps COMPLETED
             step += 1
         return restarts

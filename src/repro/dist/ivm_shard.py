@@ -130,6 +130,35 @@ def build_distributed_trigger(trigger: Trigger, program: Program, mesh: Mesh,
     return run
 
 
+def build_distributed_planned_trigger(trigger: Trigger, program: Program,
+                                      mesh: Mesh, *, reeval_views=(),
+                                      lazy_views=(), jit: bool = True,
+                                      axis: Optional[str] = None
+                                      ) -> Callable[[Env, Array, Array], Env]:
+    """The planned firing (per-view incremental/reeval/lazy partition,
+    see :func:`repro.core.codegen.build_planned_trigger_fn`) staged for
+    row-sharded execution on ``mesh``.
+
+    The plan partition changes *what* is computed, not *where*: factor
+    blocks and rank-k sweeps stay row-local, and an in-firing
+    re-evaluation of a view is the same row-sharded matmul chain the
+    re-evaluation baseline runs — GSPMD inserts the collectives either
+    way, so distributed planned output matches the single-device
+    planned output to fp32 tolerance by construction.  Plans carry the
+    mesh key (``repro.plan.trigger_cache.mesh_cache_key``) so engines
+    on identical meshes share these compiled firings through the
+    trigger cache instead of re-jitting per instance.
+    """
+    from repro.core.codegen import build_planned_trigger_fn
+    axis = axis or mesh.axis_names[0]
+    return build_planned_trigger_fn(
+        trigger, program, dict(program.dims),
+        reeval_views=reeval_views, lazy_views=lazy_views, jit=jit,
+        apply_backend="xla", donate=False,
+        constrain=_constrainer(mesh, axis),
+        replicate=lambda x: _replicate(mesh, x))
+
+
 def distributed_reeval_matmul(mesh: Mesh, *, jit: bool = True,
                               axis: Optional[str] = None
                               ) -> Callable[[Array, Array], Array]:

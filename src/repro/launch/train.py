@@ -26,6 +26,9 @@ from repro.configs import get_config
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.data.pipeline import TokenPipeline, synth_batch
 from repro.dist.checkpoint import CheckpointManager
+from repro.dist.fault_tolerance import (FaultToleranceConfig,
+                                        FaultTolerantController, RunPhase,
+                                        TrainingSupervisor)
 from repro.dist.sharding import use_sharding
 from repro.launch.mesh import make_local_mesh
 from repro.models import build_model
@@ -64,7 +67,21 @@ def resolve_config(args) -> ModelConfig:
 def train(cfg: ModelConfig, *, steps: int, batch: int, seq: int,
           lr: float = 3e-4, seed: int = 0, ckpt_dir: Optional[str] = None,
           save_every: int = 100, compression_rank: int = 0,
-          mesh=None, log_every: int = 10, resume: bool = True) -> Dict:
+          mesh=None, log_every: int = 10, resume: bool = True,
+          controller: Optional[FaultTolerantController] = None,
+          ft_config: Optional[FaultToleranceConfig] = None) -> Dict:
+    """Train ``cfg`` for ``steps`` steps under the fault-tolerance
+    control plane: every step heartbeats the
+    :class:`FaultTolerantController`, and the
+    :class:`TrainingSupervisor` owns the loop — on an eviction or
+    rejoin it restores from the newest checkpoint and continues, on
+    ``HALTED`` it stops.  A healthy single-host run takes exactly the
+    same step sequence as the bare loop it replaced.
+
+    ``controller`` injects a pre-built controller (tests drive failures
+    through it); by default one is built over ``jax.process_count()``
+    hosts with ``ft_config``.
+    """
     model = build_model(cfg)
     shape = ShapeConfig("train", seq, batch, "train")
     state = init_train_state(model, jax.random.PRNGKey(seed))
@@ -81,33 +98,65 @@ def train(cfg: ModelConfig, *, steps: int, batch: int, seq: int,
         state = mgr.restore(state, step=start)
         print(f"[train] resumed from step {start}")
 
-    ctx = use_sharding(mesh) if mesh is not None else _null_ctx()
-    history = []
-    with ctx:
-        t_last = time.perf_counter()
-        for t in range(start, steps):
-            batch_np = synth_batch(cfg, shape, seed=seed, step=t)
-            state, metrics = step_fn(state,
-                                     {k: jnp.asarray(v)
-                                      for k, v in batch_np.items()})
-            if (t + 1) % log_every == 0 or t == steps - 1:
-                loss = float(metrics["loss"])
-                dt = (time.perf_counter() - t_last) / log_every
-                t_last = time.perf_counter()
-                tok_s = batch * seq / dt
-                print(f"[train] step {t+1:5d} loss {loss:7.4f} "
-                      f"lr {float(metrics['lr']):.2e} "
-                      f"gnorm {float(metrics['grad_norm']):7.3f} "
-                      f"{dt*1e3:7.1f} ms/step {tok_s:9.0f} tok/s",
-                      flush=True)
-                history.append({"step": t + 1, "loss": loss,
-                                "ms_per_step": dt * 1e3})
-            if mgr and (t + 1) % save_every == 0:
-                mgr.save(t + 1, state)
+    ctl = controller or FaultTolerantController(
+        n_hosts=max(jax.process_count(), 1), config=ft_config)
+    supervisor = TrainingSupervisor(ctl, save_every=save_every if mgr else 0)
+
+    # the supervisor owns the loop; the closures own the state
+    box = {"state": state, "t_last": time.perf_counter()}
+    history: list = []
+
+    def run_step(t: int) -> float:
+        t0 = time.perf_counter()
+        batch_np = synth_batch(cfg, shape, seed=seed, step=t)
+        box["state"], metrics = step_fn(box["state"],
+                                        {k: jnp.asarray(v)
+                                         for k, v in batch_np.items()})
+        if (t + 1) % log_every == 0 or t == steps - 1:
+            loss = float(metrics["loss"])
+            dt = (time.perf_counter() - box["t_last"]) / log_every
+            box["t_last"] = time.perf_counter()
+            tok_s = batch * seq / dt
+            print(f"[train] step {t+1:5d} loss {loss:7.4f} "
+                  f"lr {float(metrics['lr']):.2e} "
+                  f"gnorm {float(metrics['grad_norm']):7.3f} "
+                  f"{dt*1e3:7.1f} ms/step {tok_s:9.0f} tok/s",
+                  flush=True)
+            history.append({"step": t + 1, "loss": loss,
+                            "ms_per_step": dt * 1e3})
+        return time.perf_counter() - t0
+
+    def save(t: int) -> None:
         if mgr:
-            mgr.save(steps, state, blocking=True)
-    return {"history": history, "final_loss": history[-1]["loss"]
-            if history else None}
+            mgr.save(t, box["state"])
+
+    def restore() -> int:
+        if mgr is None or mgr.latest_step() is None:
+            # nothing to restore from: restart the run from scratch
+            box["state"] = init_train_state(model, jax.random.PRNGKey(seed))
+            return 0
+        s = mgr.latest_step()
+        box["state"] = mgr.restore(box["state"], step=s)
+        # drop log entries from steps the restart will replay, so
+        # history/--out never carry duplicate step records
+        history[:] = [h for h in history if h["step"] <= s]
+        print(f"[train] restart: restored step {s} "
+              f"({len(ctl.alive_hosts())} hosts alive)")
+        return s
+
+    ctx = use_sharding(mesh) if mesh is not None else _null_ctx()
+    with ctx:
+        restarts = supervisor.run(steps, run_step, save, restore,
+                                  start_step=start)
+        if mgr and ctl.phase != RunPhase.HALTED:
+            mgr.save(steps, box["state"], blocking=True)
+    if ctl.phase == RunPhase.HALTED:
+        print(f"[train] HALTED: {ctl.events[-1] if ctl.events else ''}")
+    return {"history": history,
+            "final_loss": history[-1]["loss"] if history else None,
+            "restarts": restarts,
+            "phase": ctl.phase.value,
+            "ft_events": list(ctl.events)}
 
 
 class _null_ctx:
@@ -131,18 +180,27 @@ def main():
     ap.add_argument("--compression-rank", type=int, default=0)
     ap.add_argument("--mesh", choices=["none", "local"], default="none")
     ap.add_argument("--model-parallel", type=int, default=1)
+    ap.add_argument("--heartbeat-timeout", type=float, default=30.0)
+    ap.add_argument("--straggler-factor", type=float, default=0.0,
+                    help="evict hosts slower than this × median step time "
+                         "(0 disables)")
+    ap.add_argument("--min-hosts", type=int, default=1)
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
 
     cfg = resolve_config(args)
     mesh = (make_local_mesh(args.model_parallel)
             if args.mesh == "local" else None)
+    ft = FaultToleranceConfig(heartbeat_timeout=args.heartbeat_timeout,
+                              straggler_factor=args.straggler_factor,
+                              min_hosts=args.min_hosts)
     print(f"[train] {cfg.name}: {cfg.param_count()/1e6:.1f}M params, "
           f"{args.steps} steps, batch {args.batch}×{args.seq}")
     result = train(cfg, steps=args.steps, batch=args.batch, seq=args.seq,
                    lr=args.lr, ckpt_dir=args.ckpt_dir,
                    save_every=args.save_every,
-                   compression_rank=args.compression_rank, mesh=mesh)
+                   compression_rank=args.compression_rank, mesh=mesh,
+                   ft_config=ft)
     if args.out:
         with open(args.out, "w") as f:
             json.dump(result, f, indent=1)

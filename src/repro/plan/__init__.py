@@ -1,0 +1,32 @@
+"""repro.plan — cost-based adaptive execution planning for IVM programs.
+
+Public API:
+
+    from repro.plan import (
+        WorkloadDescriptor, ViewPlan, MaintenancePlan,
+        plan_program, plan_for_engine, program_fingerprint,
+        AdaptivePlanner, TriggerCache, global_trigger_cache,
+    )
+
+A :class:`MaintenancePlan` tells the engine, per maintained view,
+whether to propagate factored deltas, re-evaluate, or switch between
+the two at a rank threshold — plus which intermediates to keep eagerly
+materialized.  :class:`AdaptivePlanner` refits the plan online from
+observed firings; :class:`TriggerCache` makes compiled triggers survive
+across engine instances.  See docs/planner.md.
+"""
+
+from .planner import (MaintenancePlan, ViewPlan, WorkloadDescriptor,
+                      plan_for_engine, plan_program, program_fingerprint,
+                      static_plan)
+from .trigger_cache import TriggerCache, global_trigger_cache, mesh_cache_key
+from .adaptive import AdaptivePlanner
+from .calibrate import calibrate_cost_scale
+
+__all__ = [
+    "MaintenancePlan", "ViewPlan", "WorkloadDescriptor",
+    "plan_for_engine", "plan_program", "program_fingerprint",
+    "static_plan", "calibrate_cost_scale",
+    "TriggerCache", "global_trigger_cache", "mesh_cache_key",
+    "AdaptivePlanner",
+]

@@ -1,0 +1,132 @@
+"""Online re-planning: watch the workload, re-plan when it drifts.
+
+The static planner prices a plan against a *declared*
+:class:`WorkloadDescriptor`; real update streams drift — adapter bursts
+grow, batch coalescing changes T, a quiet corpus suddenly takes
+high-rank refreshes.  :class:`AdaptivePlanner` closes the loop: the
+engine reports every firing's observed stacked rank, and every
+``replan_every`` firings the planner refits the descriptor to the
+observed distribution (median / p10 / p90) and re-plans if the fit has
+drifted past ``drift_tol``.  A re-plan that changes no per-view choice
+is discarded; one that does is handed back to the engine, which
+hot-swaps it (pending queues survive, cached triggers for already-seen
+(bucket, partition) keys are reused from the trigger cache).
+"""
+
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import replace
+from typing import Deque, Dict, Optional
+
+from .planner import (MaintenancePlan, WorkloadDescriptor, plan_program,
+                      program_fingerprint)
+
+
+class AdaptivePlanner:
+    """Re-plans a :class:`MaintenancePlan` from observed firings.
+
+    Construct unbound (``AdaptivePlanner(workload)``) and hand to
+    ``IncrementalEngine(plan=...)`` — the engine binds it to its
+    compiled program — or bind explicitly with :meth:`bind` for
+    standalone use.
+    """
+
+    def __init__(self, workload: Optional[WorkloadDescriptor] = None, *,
+                 replan_every: int = 8, drift_tol: float = 0.5,
+                 history: int = 256):
+        if replan_every < 1:
+            raise ValueError(f"replan_every must be ≥ 1, got {replan_every}")
+        self.workload = workload or WorkloadDescriptor()
+        self.replan_every = replan_every
+        self.drift_tol = drift_tol
+        self._ranks: Deque[int] = deque(maxlen=history)
+        self._batches: Deque[int] = deque(maxlen=history)
+        self._since_replan = 0
+        self.replans = 0
+        self.plan: Optional[MaintenancePlan] = None
+        self._compiled = None
+        self._binding: Optional[Dict[str, int]] = None
+        self._mesh = None
+        self._mesh_axis = None
+
+    # -- binding -------------------------------------------------------------
+    def bind(self, compiled, binding: Optional[Dict[str, int]] = None,
+             mesh=None, mesh_axis: Optional[str] = None) -> MaintenancePlan:
+        """Attach to a compiled program and produce the initial plan.
+        Re-binding to the same fingerprint keeps observation history."""
+        fp = program_fingerprint(compiled.program, binding)
+        if self.plan is not None and self.plan.fingerprint != fp:
+            raise ValueError(
+                "AdaptivePlanner is already bound to a different program "
+                f"({self.plan.fingerprint} != {fp})")
+        self._compiled = compiled
+        self._binding = dict(compiled.program.dims
+                             if binding is None else binding)
+        self._mesh, self._mesh_axis = mesh, mesh_axis
+        if self.plan is None:
+            self.plan = plan_program(compiled, self.workload,
+                                     binding=self._binding, mesh=mesh,
+                                     mesh_axis=mesh_axis)
+        return self.plan
+
+    @property
+    def bound(self) -> bool:
+        return self._compiled is not None
+
+    def adopt(self, plan: MaintenancePlan) -> None:
+        """Accept an externally installed plan (engine hot-swap) as the
+        new baseline, so the next drift check prices against it instead
+        of silently reverting to the planner's own stale fit."""
+        if self.plan is not None and self.plan.fingerprint != plan.fingerprint:
+            raise ValueError(
+                "cannot adopt a plan for a different program "
+                f"({plan.fingerprint} != {self.plan.fingerprint})")
+        self.plan = plan
+        self.workload = plan.workload
+        self._since_replan = 0
+
+    # -- observation loop ----------------------------------------------------
+    def observe(self, input_name: str, stacked_rank: int,
+                batch_size: int) -> None:
+        """Record one firing (pre-padding stacked rank, T updates)."""
+        self._ranks.append(max(1, int(stacked_rank)))
+        self._batches.append(max(1, int(batch_size)))
+        self._since_replan += 1
+
+    def observed_workload(self) -> Optional[WorkloadDescriptor]:
+        """The empirical descriptor: median/p10/p90 of observed stacked
+        ranks, with the median batch size factored out so the fitted
+        (update_rank, batch_size) keep their declared meanings."""
+        if not self._ranks:
+            return None
+        ranks, batches = sorted(self._ranks), sorted(self._batches)
+        q = lambda xs, p: xs[min(len(xs) - 1, int(p * len(xs)))]
+        t = max(1, q(batches, 0.5))
+        k = max(1, round(q(ranks, 0.5) / t))
+        return replace(self.workload, update_rank=k, batch_size=t,
+                       rank_lo=q(ranks, 0.1), rank_hi=q(ranks, 0.9))
+
+    def maybe_replan(self) -> Optional[MaintenancePlan]:
+        """Re-plan if due and drifted; returns the new plan only when a
+        per-view choice actually changed (else ``None``)."""
+        if (not self.bound or self.plan is None
+                or self._since_replan < self.replan_every):
+            return None
+        self._since_replan = 0
+        fitted = self.observed_workload()
+        if fitted is None:
+            return None
+        expected = self.workload.expected_rank()
+        if abs(fitted.expected_rank() - expected) <= \
+                self.drift_tol * max(expected, 1):
+            return None
+        self.workload = fitted
+        new = plan_program(self._compiled, fitted, binding=self._binding,
+                           mesh=self._mesh, mesh_axis=self._mesh_axis)
+        if new.views == self.plan.views:
+            self.plan = new  # same choices, fresher pricing
+            return None
+        self.plan = new
+        self.replans += 1
+        return new

@@ -1,0 +1,323 @@
+"""Cost-based maintenance planning for compiled IVM programs (§5–§7).
+
+LINVIEW's central economic claim is that incremental maintenance only
+wins when you *choose* per view: factored delta propagation while the
+update rank stays small, re-evaluation once the avalanche makes the
+delta as expensive as recomputing (§7 crossover), and a hybrid of the
+two when the workload straddles the boundary.  The engine has always
+had the cost model (:mod:`repro.core.cost`) and the compiled triggers
+(:mod:`repro.core.compiler`); this module connects them into an
+executable **maintenance plan**:
+
+  * a per-view **strategy** — ``"incremental"`` | ``"reeval"`` |
+    ``"hybrid"`` (incremental until a rank/staleness threshold, then
+    re-evaluate);
+  * a DAG-level **materialization choice** — an intermediate view is
+    kept eagerly maintained iff its amortized per-firing delta cost
+    beats recomputing it (and its consumers) on demand, à la §5's
+    intermediate-view discussion;
+  * the **workload descriptor** the choices were priced under, so an
+    adaptive planner can detect drift and re-plan online.
+
+Plans are pure data (JSON-serializable) — execution lives in
+:class:`repro.core.runtime.IncrementalEngine`, compiled-trigger reuse in
+:mod:`repro.plan.trigger_cache`.  See docs/planner.md.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+from dataclasses import asdict, dataclass, field, replace
+from typing import Dict, FrozenSet, List, Optional, Tuple
+
+from repro.core.codegen import trigger_touched_views
+from repro.core.compiler import CompiledProgram, compile_program
+from repro.core.cost import (batch_crossover_rank, batched_strategy,
+                             expr_cost, shape_of)
+from repro.core.program import Program
+
+STRATEGIES = ("incremental", "reeval", "hybrid")
+
+
+# ---------------------------------------------------------------------------
+# workload descriptor
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class WorkloadDescriptor:
+    """What the planner prices against: the update stream shape.
+
+    ``update_rank`` × ``batch_size`` is the typical stacked rank of one
+    trigger firing; ``rank_lo`` / ``rank_hi`` bound the distribution
+    (default: the expectation itself — a point mass).  A view whose §7
+    crossover lies above ``rank_hi`` is always incremental, below
+    ``rank_lo`` always re-evaluated, and in between goes hybrid.
+    ``reads_per_firing`` is how often the store is *read* relative to
+    firings — the materialization lever: intermediates nobody reads can
+    be maintained lazily.
+
+    ``cost_scale`` corrects the FLOP model for the backend: the
+    wall-clock cost of one incremental-sweep FLOP relative to one
+    re-evaluation FLOP (``1.0`` = trust FLOPs).  Skinny rank-K updates
+    run at a far worse rate than the dense matmuls re-evaluation is
+    made of — >10x on CPU BLAS — so the *effective* §7 crossover sits
+    at ``K*/cost_scale``.  Measure it with
+    :func:`repro.plan.calibrate_cost_scale`.
+    """
+
+    update_rank: int = 1          # per-update factored rank k
+    batch_size: int = 1           # T updates coalesced per firing
+    rank_lo: Optional[int] = None
+    rank_hi: Optional[int] = None
+    reads_per_firing: float = 1.0
+    cost_scale: float = 1.0       # wall-clock per-FLOP cost of the sweep
+    #                               relative to re-evaluation (calibrated)
+    mesh_shape: Optional[Tuple[int, ...]] = None
+    mesh_axes: Optional[Tuple[str, ...]] = None
+
+    def expected_rank(self) -> int:
+        return max(1, int(self.update_rank) * int(self.batch_size))
+
+    def rank_bounds(self) -> Tuple[int, int]:
+        k = self.expected_rank()
+        lo = k if self.rank_lo is None else max(1, int(self.rank_lo))
+        # hi floors at lo so a descriptor with only rank_lo set can
+        # never produce inverted bounds (hi < lo would misclassify
+        # always-past-crossover workloads as incremental)
+        hi = max(lo, k) if self.rank_hi is None else max(lo, int(self.rank_hi))
+        return lo, hi
+
+
+# ---------------------------------------------------------------------------
+# plan format
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ViewPlan:
+    """One maintained view's refresh policy.
+
+    ``materialize=False`` is only sound for views that no trigger's
+    surviving factor blocks read — :func:`plan_program` guarantees this
+    (``_trigger_read_views`` ∪ outputs ∪ inputs are never lazy); a
+    hand-crafted plan that unmaterializes a factor-block-read view
+    feeds stale values to incremental consumers.  Views read only by
+    *re-evaluated* consumers are safe: the engine pulls stale lazy
+    views into the recompute closure."""
+
+    view: str
+    strategy: str                       # "incremental" | "reeval" | "hybrid"
+    threshold_rank: Optional[int] = None  # hybrid: switch to reeval here
+    materialize: bool = True            # False → lazy (recompute on read)
+    crossover_rank: int = 0             # §7 crossover (diagnostic)
+    reeval_flops: float = 0.0           # view re-evaluation cost (diagnostic)
+
+    def __post_init__(self):
+        if self.strategy not in STRATEGIES:
+            raise ValueError(f"unknown strategy {self.strategy!r}")
+
+
+@dataclass(frozen=True)
+class MaintenancePlan:
+    """Executable maintenance plan for one compiled program.
+
+    ``fingerprint`` ties the plan to the (program, dims) it was priced
+    for — the engine refuses to execute a plan for a different program,
+    and the compiled-trigger cache keys on it so identical plans share
+    jitted triggers across engine instances.
+    """
+
+    fingerprint: str
+    workload: WorkloadDescriptor
+    views: Dict[str, ViewPlan]
+    mesh_key: Optional[Tuple] = None
+
+    # -- per-firing decision -------------------------------------------------
+    def decide(self, stacked_rank: int, accum_rank: Dict[str, int]
+               ) -> Tuple[FrozenSet[str], FrozenSet[str]]:
+        """Partition views for a firing at ``stacked_rank``.
+
+        Returns ``(reeval_due, lazy_skip)``: views to re-evaluate inside
+        the firing, and unmaterialized views to skip (marked stale,
+        recomputed on read).  ``accum_rank`` is the engine's per-view
+        applied rank since the view's last re-evaluation — the hybrid
+        staleness counter: a hybrid view re-evaluates when either this
+        firing's rank or the accumulated rank crosses its threshold.
+        """
+        reeval, lazy = set(), set()
+        for name, vp in self.views.items():
+            if not vp.materialize:
+                lazy.add(name)
+                continue
+            if vp.strategy == "reeval":
+                reeval.add(name)
+            elif vp.strategy == "hybrid":
+                thr = max(1, int(vp.threshold_rank or 1))
+                # accumulated rank is reset to 0 whenever the view is
+                # re-evaluated, so this single check covers both "this
+                # firing is too big" and "staleness built up"
+                if accum_rank.get(name, 0) + stacked_rank >= thr:
+                    reeval.add(name)
+        return frozenset(reeval), frozenset(lazy)
+
+    def strategy(self, view: str) -> str:
+        return self.views[view].strategy
+
+    def lazy_views(self) -> FrozenSet[str]:
+        return frozenset(n for n, vp in self.views.items()
+                         if not vp.materialize)
+
+    # -- serialization -------------------------------------------------------
+    def to_json(self) -> str:
+        return json.dumps({
+            "fingerprint": self.fingerprint,
+            "workload": asdict(self.workload),
+            "views": {n: asdict(vp) for n, vp in sorted(self.views.items())},
+            "mesh_key": list(self.mesh_key) if self.mesh_key else None,
+        }, indent=1, default=list)
+
+    @staticmethod
+    def from_json(s: str) -> "MaintenancePlan":
+        d = json.loads(s)
+        wl = d["workload"]
+        for k in ("mesh_shape", "mesh_axes"):
+            if wl.get(k) is not None:
+                wl[k] = tuple(wl[k])
+
+        def untuple(x):  # JSON lists back to the nested-tuple mesh key
+            return tuple(untuple(i) for i in x) if isinstance(x, list) else x
+
+        return MaintenancePlan(
+            fingerprint=d["fingerprint"],
+            workload=WorkloadDescriptor(**wl),
+            views={n: ViewPlan(**vp) for n, vp in d["views"].items()},
+            mesh_key=untuple(d["mesh_key"]) if d.get("mesh_key") else None)
+
+
+# ---------------------------------------------------------------------------
+# fingerprinting
+# ---------------------------------------------------------------------------
+
+
+def program_fingerprint(program: Program,
+                        binding: Optional[Dict[str, int]] = None) -> str:
+    """Stable identity of (program structure, concrete dims).
+
+    Two engines compiled from structurally identical programs at the
+    same sizes produce the same fingerprint — that is what lets a plan
+    (and its cached compiled triggers) survive across
+    ``IncrementalEngine`` instances.
+    """
+    binding = dict(program.dims if binding is None else binding)
+    payload = repr(program) + "|" + repr(sorted(binding.items()))
+    return hashlib.sha256(payload.encode()).hexdigest()[:16]
+
+
+# ---------------------------------------------------------------------------
+# the planner
+# ---------------------------------------------------------------------------
+
+
+def _trigger_read_views(compiled: CompiledProgram) -> FrozenSet[str]:
+    """Views some trigger's factor blocks *read* (old values).
+
+    The delta chain assumes every referenced view is current at firing
+    time, so these can never be maintained lazily."""
+    read: set = set()
+    for trig in compiled.triggers.values():
+        _, ro = trigger_touched_views(trig)
+        read |= set(ro)
+        for a in trig.assigns:
+            read |= set(a.expr.free_vars())
+    return frozenset(read)
+
+
+def plan_program(compiled, workload: WorkloadDescriptor, *,
+                 binding: Optional[Dict[str, int]] = None,
+                 mesh=None, mesh_axis: Optional[str] = None
+                 ) -> MaintenancePlan:
+    """Price every maintained view under ``workload`` and emit a plan.
+
+    Strategy per view (the §7 crossover ``K* = reeval/(2·n·m)``,
+    divided by the workload's calibrated ``cost_scale`` to get the
+    effective wall-clock crossover ``K*_eff``):
+
+      * ``rank_hi < K*_eff``  → ``incremental`` — the factored sweep
+        always wins at the ranks this workload produces;
+      * ``rank_lo ≥ K*_eff``  → ``reeval`` — the avalanche always loses;
+      * otherwise             → ``hybrid``, ``threshold_rank = K*_eff``.
+
+    Materialization (intermediates only): a view that no trigger reads
+    and no output needs is kept eagerly maintained iff its per-firing
+    apply cost beats ``reads_per_firing ×`` its recompute cost —
+    otherwise it goes lazy (skipped during firings, recomputed on
+    read).
+    """
+    if isinstance(compiled, Program):
+        compiled = compile_program(compiled)
+    program = compiled.program
+    binding = dict(program.dims if binding is None else binding)
+    lo, hi = workload.rank_bounds()
+    outputs = set(program.output_names())
+    never_lazy = _trigger_read_views(compiled) | outputs | set(program.inputs)
+
+    views: Dict[str, ViewPlan] = {}
+    for st in program.statements:
+        name = st.target.name
+        shape = shape_of(st.target, binding)
+        reeval = expr_cost(st.expr, binding).flops
+        kstar = batch_crossover_rank(shape, reeval)
+        k_eff = max(1, int(kstar / max(workload.cost_scale, 1e-12)))
+        if hi < k_eff:
+            strat, thr = "incremental", None
+        elif lo >= k_eff:
+            strat, thr = "reeval", None
+        else:
+            strat, thr = "hybrid", k_eff
+        materialize = True
+        if name not in never_lazy:
+            n, m = shape
+            k = workload.expected_rank()
+            maintain = 2.0 * k * n * m                 # per-firing sweep
+            on_demand = workload.reads_per_firing * reeval
+            materialize = maintain <= on_demand
+        views[name] = ViewPlan(view=name, strategy=strat,
+                               threshold_rank=thr, materialize=materialize,
+                               crossover_rank=kstar, reeval_flops=reeval)
+
+    from .trigger_cache import mesh_cache_key
+    wl = workload
+    if mesh is not None and wl.mesh_shape is None:
+        wl = replace(wl, mesh_shape=tuple(mesh.shape.values()),
+                     mesh_axes=tuple(mesh.axis_names))
+    return MaintenancePlan(
+        fingerprint=program_fingerprint(program, binding),
+        workload=wl, views=views,
+        mesh_key=mesh_cache_key(mesh, mesh_axis))
+
+
+def plan_for_engine(engine, workload: WorkloadDescriptor) -> MaintenancePlan:
+    """Plan against an engine's compiled program / binding / mesh."""
+    return plan_program(engine.compiled, workload, binding=engine.binding,
+                        mesh=engine.mesh, mesh_axis=engine.mesh_axis)
+
+
+def static_plan(engine, strategy: str,
+                workload: Optional[WorkloadDescriptor] = None
+                ) -> MaintenancePlan:
+    """The degenerate plan that forces one ``strategy`` on every view.
+
+    The static baselines the adaptive planner is judged against
+    (benchmarks, A/B tests): ``"incremental"`` reproduces the
+    pre-planner engine behavior, ``"reeval"`` the paper's batched
+    REEVAL baseline.  Every view stays materialized.
+    """
+    base = plan_for_engine(engine, workload or WorkloadDescriptor())
+    views = {name: replace(vp, strategy=strategy, threshold_rank=None,
+                           materialize=True)
+             for name, vp in base.views.items()}
+    return MaintenancePlan(fingerprint=base.fingerprint,
+                           workload=base.workload, views=views,
+                           mesh_key=base.mesh_key)

@@ -1,0 +1,100 @@
+"""Persistent compiled-trigger cache (ROADMAP: stop re-jitting per
+(bucket, mesh) on every new engine instance).
+
+A compiled trigger is a pure function of (program fingerprint, trigger
+kind, input, bucket rank, plan partition, mesh, backend options) — none
+of it engine-local — so the jitted callable can outlive the
+``IncrementalEngine`` that first built it.  The cache stores callables
+under exactly that key: a second engine constructed over a structurally
+identical program at the same sizes, executing the same plan on the
+same mesh, gets the *same* function object back, and jax's jit cache
+(keyed on function identity) serves the compiled executable with no
+re-trace and no re-compile.
+
+Process-level by design: XLA executables are not picklable, so true
+on-disk persistence is delegated to jax's own compilation cache
+(``jax.config.update("jax_compilation_cache_dir", …)``), which composes
+with this cache — the key here removes the *re-trace*, the jax cache
+removes the *re-compile* across processes.
+
+Engines use the process-global instance whenever they execute a plan;
+pass ``trigger_cache=TriggerCache()`` for an isolated one (tests).
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import Callable, Dict, Optional, Tuple
+
+
+class TriggerCache:
+    """Thread-safe (key → compiled trigger callable) map with hit/miss
+    counters.  Keys must be hashable tuples; values are the callables
+    produced by the codegen builders."""
+
+    def __init__(self):
+        self._fns: Dict[Tuple, Callable] = {}
+        self._lock = threading.Lock()
+        self.hits = 0
+        self.misses = 0
+
+    def get_or_build(self, key: Tuple, builder: Callable[[], Callable]
+                     ) -> Callable:
+        """Return the cached callable for ``key``, building (and
+        retaining) it on first use."""
+        with self._lock:
+            fn = self._fns.get(key)
+            if fn is not None:
+                self.hits += 1
+                return fn
+        fn = builder()  # build outside the lock: jit tracing can be slow
+        with self._lock:
+            won = self._fns.setdefault(key, fn)
+            if won is fn:
+                self.misses += 1
+            else:
+                self.hits += 1
+        return won
+
+    def __len__(self) -> int:
+        return len(self._fns)
+
+    def __contains__(self, key: Tuple) -> bool:
+        return key in self._fns
+
+    def clear(self) -> None:
+        with self._lock:
+            self._fns.clear()
+            self.hits = 0
+            self.misses = 0
+
+    def stats(self) -> Dict[str, int]:
+        return {"entries": len(self._fns), "hits": self.hits,
+                "misses": self.misses}
+
+
+_GLOBAL = TriggerCache()
+
+
+def global_trigger_cache() -> TriggerCache:
+    """The process-wide cache engines share by default."""
+    return _GLOBAL
+
+
+def mesh_cache_key(mesh, axis: Optional[str] = None) -> Optional[Tuple]:
+    """Hashable identity of a mesh for trigger-cache keying.
+
+    Includes the concrete device ids in order: the distributed trigger
+    builders close over ``NamedSharding(mesh, …)``, so the compiled
+    callable is pinned to that exact device placement — two meshes with
+    the same shape over different devices (or a permutation, e.g. after
+    an elastic reshape) must NOT share cache entries.  Two meshes over
+    the identical device sequence compile identical triggers and do
+    share."""
+    if mesh is None:
+        return None
+    devs = mesh.devices.ravel()
+    return (tuple(mesh.shape.items()),
+            axis or mesh.axis_names[0],
+            devs[0].platform if len(devs) else "cpu",
+            tuple(int(d.id) for d in devs))

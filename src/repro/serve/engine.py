@@ -115,6 +115,20 @@ class ServeEngine:
         for view in self._logit_views.values():
             view.flush()
 
+    def replan_views(self, workload) -> Dict[str, Any]:
+        """Hot-swap a cost-based maintenance re-plan into every attached
+        logit view (e.g. when the adapter-delta traffic profile shifts).
+
+        ``workload`` is a :class:`repro.plan.WorkloadDescriptor`; each
+        view prices its own plan against it.  The swap never drops the
+        staleness contract: pending queued deltas survive (and flush on
+        the unchanged ``flush_size``/``flush_age`` thresholds under the
+        new plan), and in-flight reads still see logits at most
+        ``flush_age`` stale.  Returns {weight_path: installed plan}.
+        """
+        return {path: view.replan(workload)
+                for path, view in self._logit_views.items()}
+
     # -- checkpoint hooks ----------------------------------------------------
     def save_checkpoint(self, manager, step: int,
                         blocking: bool = False) -> str:

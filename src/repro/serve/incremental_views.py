@@ -39,7 +39,8 @@ class IncrementalLogitView:
 
     def __init__(self, hidden: jax.Array, head: jax.Array, rank: int = 1,
                  flush_size: int = 16, flush_age: float = 0.05,
-                 max_batch_rank: Optional[int] = None):
+                 max_batch_rank: Optional[int] = None,
+                 plan=None):
         m, d = hidden.shape
         p, d2 = head.shape
         assert d == d2
@@ -53,9 +54,27 @@ class IncrementalLogitView:
         self.engine = IncrementalEngine(
             prog, {"W": rank, "H": rank},
             max_batch_rank=max_batch_rank,
-            flush_size=flush_size, flush_age=flush_age)
+            flush_size=flush_size, flush_age=flush_age,
+            plan=plan)
         self.engine.initialize({"H": jnp.asarray(hidden, jnp.float32),
                                 "W": jnp.asarray(head, jnp.float32)})
+
+    def replan(self, workload) -> "object":
+        """Hot-swap a cost-based maintenance re-plan for this view.
+
+        ``workload`` is a :class:`repro.plan.WorkloadDescriptor` (or a
+        ready :class:`~repro.plan.MaintenancePlan`).  The staleness
+        contract survives the swap: pending queued hot-swap deltas are
+        kept (they flush under the *new* plan on the same
+        ``flush_size``/``flush_age`` thresholds), and reads through
+        :attr:`logits` still see at most ``flush_age`` of staleness.
+        Returns the installed plan.
+        """
+        from repro.plan import MaintenancePlan, plan_for_engine
+        plan = (workload if isinstance(workload, MaintenancePlan)
+                else plan_for_engine(self.engine, workload))
+        self.engine.set_plan(plan)
+        return plan
 
     @property
     def logits(self) -> jax.Array:

@@ -102,6 +102,47 @@ def test_latest_step_and_gc(tmp_path, rng):
     assert len(mgr.all_steps()) <= 2
 
 
+def test_async_save_snapshot_isolation(tmp_path, rng):
+    """The caller-thread staging must own its buffers: mutating (or
+    donating) the live tree right after save() returns cannot corrupt
+    the checkpoint, even though the D2H gather happens later on the
+    writer thread."""
+    mgr = CheckpointManager(str(tmp_path), async_save=True)
+    w = rng.normal(size=(64, 48)).astype(np.float32)
+    tree = {"w": jnp.asarray(w), "host": w.copy()}
+    mgr.save(1, tree)
+    # simulate the training loop reusing/donating the buffers immediately
+    tree["host"][:] = -1.0
+    tree["w"] = jax.jit(lambda x: x * 0.0, donate_argnums=(0,))(tree["w"])
+    mgr.wait()
+    restored = mgr.restore({"w": jnp.zeros((64, 48), jnp.float32),
+                            "host": np.zeros((64, 48), np.float32)}, step=1)
+    np.testing.assert_allclose(np.asarray(restored["w"]), w, rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(restored["host"]), w, rtol=1e-6)
+
+
+def test_async_incremental_chain_encodes_on_writer_thread(tmp_path, rng):
+    """Incremental encoding (which diffs against the previous
+    reconstructed base) still chains correctly when every save is
+    staged async."""
+    mgr = CheckpointManager(str(tmp_path), async_save=True,
+                            incremental_rank=4, full_every=100)
+    t = _tree(rng)
+    mgr.save(0, t)
+    u = rng.normal(size=(64, 2)).astype(np.float32)
+    v = rng.normal(size=(48, 2)).astype(np.float32)
+    t2 = dict(t)
+    t2["w1"] = t["w1"] + u @ v.T
+    path = mgr.save(1, t2)
+    mgr.wait()
+    import json
+    with open(path + ".json") as f:
+        assert json.load(f)["kind"] == "incremental"
+    restored = mgr.restore(t2, step=1)
+    np.testing.assert_allclose(np.asarray(restored["w1"]),
+                               np.asarray(t2["w1"]), rtol=1e-4, atol=1e-4)
+
+
 def test_train_state_roundtrip(tmp_path):
     """Whole TrainState (params + opt) through the manager."""
     from repro.configs import get_config

@@ -107,6 +107,58 @@ def test_engine_mesh_path_multi_device_subprocess():
     assert res.returncode == 0, f"STDOUT:\n{res.stdout}\nSTDERR:\n{res.stderr}"
 
 
+def test_planned_engine_multi_device_subprocess():
+    """A maintenance plan executing on a real 8-way mesh: the planned
+    firing (incremental + in-firing reeval partition) stays exact vs the
+    re-evaluation baseline, and plans carry the mesh into the trigger
+    cache key so a second engine re-jits nothing."""
+    script = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core import IncrementalEngine, ReevalEngine, max_abs_diff
+        from repro.core.iterative import matrix_powers
+        from repro.data.updates import UpdateStream
+        from repro.plan import TriggerCache, WorkloadDescriptor
+
+        n = 64
+        rng = np.random.default_rng(0)
+        A = jnp.asarray(rng.normal(size=(n, n)) / 9, jnp.float32)
+        mesh = jax.make_mesh((8,), ("rows",))
+        cache = TriggerCache()
+        wl = WorkloadDescriptor(batch_size=100000)  # all views reeval
+        eng = IncrementalEngine(matrix_powers(k=8, n=n, model="exp"),
+                                mesh=mesh, plan=wl, trigger_cache=cache)
+        ree = ReevalEngine(matrix_powers(k=8, n=n, model="exp"))
+        eng.initialize({"A": A})
+        ree.initialize({"A": A})
+        it = iter(UpdateStream(n=n, m=n, scale=0.02, seed=1))
+        ups = [next(it) for _ in range(8)]
+        eng.apply_updates("A", ups, block=True)
+        assert eng.stats.plan_reevals > 0
+        for u, v in ups:
+            ree.apply_update("A", jnp.asarray(u), jnp.asarray(v))
+        err = max_abs_diff(eng.views, ree.views,
+                           tuple(eng.program.output_names()))
+        assert err < 1e-3, err
+        misses = cache.misses
+        eng2 = IncrementalEngine(matrix_powers(k=8, n=n, model="exp"),
+                                 mesh=mesh, plan=wl, trigger_cache=cache)
+        eng2.initialize({"A": A})
+        eng2.apply_updates("A", ups, block=True)
+        assert cache.misses == misses, (cache.stats(), misses)
+        err2 = max_abs_diff(eng2.views, eng.views)
+        assert err2 < 1e-5, err2
+        print("planned mesh OK", err, cache.stats())
+    """)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env.pop("XLA_FLAGS", None)
+    res = subprocess.run([sys.executable, "-c", script], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert res.returncode == 0, f"STDOUT:\n{res.stdout}\nSTDERR:\n{res.stderr}"
+
+
 # -- cost-model-driven auto-flush ---------------------------------------------
 
 

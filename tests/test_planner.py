@@ -1,0 +1,557 @@
+"""repro.plan: cost-based adaptive execution planning (ISSUE 5).
+
+The contract under test: for any update stream and ANY maintenance plan,
+
+    planned engine == unplanned incremental engine == full re-evaluation
+
+within fp tolerance — a plan changes *how* views are refreshed
+(incremental sweep, in-firing re-evaluation, hybrid switchover, lazy
+skip + recompute-on-read), never the values they converge to.  Plus the
+planner's §7 decision boundary, the per-view reeval fallback for
+planless cost-policy engines, the persistent trigger cache (no re-jit
+across engine instances for an identical plan key), online re-planning,
+and the serving hot-swap contract.
+"""
+
+from dataclasses import replace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.apps.ols import build_ols_program
+from repro.core.cost import batch_crossover_rank
+from repro.core.iterative import matrix_powers
+from repro.core.runtime import IncrementalEngine, ReevalEngine, max_abs_diff
+from repro.data.updates import UpdateStream
+from repro.plan import (AdaptivePlanner, MaintenancePlan, TriggerCache,
+                        ViewPlan, WorkloadDescriptor, calibrate_cost_scale,
+                        plan_for_engine, plan_program, program_fingerprint,
+                        static_plan)
+
+from conftest import assert_close
+
+
+def _updates(n, m, count, seed=3, rank=1):
+    it = iter(UpdateStream(n=n, m=m, rank=rank, scale=0.02, seed=seed))
+    return [next(it) for _ in range(count)]
+
+
+def _ols_inputs(m, n, seed=0):
+    rng = np.random.default_rng(seed)
+    return {"X": jnp.asarray(rng.normal(size=(m, n)), jnp.float32),
+            "Y": jnp.asarray(rng.normal(size=(m, 1)), jnp.float32)}
+
+
+def _powers_inputs(n, seed=0):
+    rng = np.random.default_rng(seed)
+    a = (0.5 / np.sqrt(n)) * rng.normal(size=(n, n))
+    return {"A": jnp.asarray(a, jnp.float32)}
+
+
+PROGRAMS = {
+    "ols": (lambda: build_ols_program(96, 48, 1), lambda: _ols_inputs(96, 48),
+            "X", 96, 48),
+    "powers": (lambda: matrix_powers(k=8, n=48, model="exp"),
+               lambda: _powers_inputs(48), "A", 48, 48),
+}
+
+# workloads that force each strategy regime (hybrid via a tiny forced
+# threshold below, so the switchover actually fires at test sizes)
+WORKLOADS = {
+    "incremental": WorkloadDescriptor(batch_size=2),
+    "reeval": WorkloadDescriptor(batch_size=100000),
+}
+
+
+def _forced_hybrid_plan(build, threshold=5):
+    eng = IncrementalEngine(build())
+    base = plan_for_engine(eng, WorkloadDescriptor())
+    views = {n: replace(v, strategy="hybrid", threshold_rank=threshold)
+             for n, v in base.views.items()}
+    return MaintenancePlan(fingerprint=base.fingerprint,
+                           workload=base.workload, views=views)
+
+
+# -- property: planned == unplanned == reeval ---------------------------------
+
+
+@pytest.mark.parametrize("prog_name", sorted(PROGRAMS))
+@pytest.mark.parametrize("plan_kind", ["incremental", "reeval", "hybrid"])
+@pytest.mark.parametrize("t_batch", [3, 8])  # 3: ragged, pads to bucket 4
+def test_planned_equals_unplanned_and_reeval(prog_name, plan_kind, t_batch):
+    build, inputs_fn, name, n, m = PROGRAMS[prog_name]
+    ups = _updates(n, m, t_batch, seed=41 + t_batch)
+    plan = (_forced_hybrid_plan(build) if plan_kind == "hybrid"
+            else WORKLOADS[plan_kind])
+
+    planned = IncrementalEngine(build(), plan=plan,
+                                trigger_cache=TriggerCache())
+    planned.initialize(inputs_fn())
+    planned.apply_updates(name, ups, block=True)
+    planned.refresh()
+
+    plain = IncrementalEngine(build())
+    plain.initialize(inputs_fn())
+    plain.apply_updates(name, ups, block=True)
+
+    ree = ReevalEngine(build())
+    ree.initialize(inputs_fn())
+    for u, v in ups:
+        ree.apply_update(name, jnp.asarray(u), jnp.asarray(v))
+
+    assert max_abs_diff(planned.views, plain.views) < 1e-3
+    outs = tuple(planned.program.output_names())
+    assert max_abs_diff(planned.views, ree.views, outs) < 1e-3
+    assert planned.stats.updates_applied == t_batch
+    assert planned.stats.triggers_fired == 1
+    if plan_kind == "reeval":
+        assert planned.stats.plan_reevals > 0
+
+
+@pytest.mark.parametrize("prog_name", sorted(PROGRAMS))
+def test_planned_per_update_stream_equivalence(prog_name):
+    """Single-update firings through a forced-hybrid plan: the
+    switchover happens mid-stream and every view stays exact."""
+    build, inputs_fn, name, n, m = PROGRAMS[prog_name]
+    ups = _updates(n, m, 9, seed=53)
+    eng = IncrementalEngine(build(), plan=_forced_hybrid_plan(build, 4),
+                            trigger_cache=TriggerCache())
+    eng.initialize(inputs_fn())
+    for u, v in ups:
+        eng.apply_update(name, jnp.asarray(u), jnp.asarray(v))
+    # accumulated rank crossed the threshold at least twice
+    assert eng.stats.plan_reevals > 0
+
+    ree = ReevalEngine(build())
+    ree.initialize(inputs_fn())
+    for u, v in ups:
+        ree.apply_update(name, jnp.asarray(u), jnp.asarray(v))
+    outs = tuple(eng.program.output_names())
+    assert max_abs_diff(eng.views, ree.views, outs) < 1e-3
+
+
+def test_planned_mesh_matches_single_device():
+    """The same plan on a 1-device mesh routes through the distributed
+    planned trigger and stays exact vs the single-device planned path."""
+    mesh = jax.make_mesh((1,), ("rows",))
+    build, inputs_fn, name, n, m = PROGRAMS["powers"]
+    plan_wl = WorkloadDescriptor(batch_size=100000)  # force in-firing reeval
+    dist = IncrementalEngine(build(), mesh=mesh, plan=plan_wl,
+                             trigger_cache=TriggerCache())
+    single = IncrementalEngine(build(), plan=plan_wl,
+                               trigger_cache=TriggerCache())
+    dist.initialize(inputs_fn())
+    single.initialize(inputs_fn())
+    ups = _updates(n, m, 6, seed=59)
+    dist.apply_updates(name, ups, block=True)
+    single.apply_updates(name, ups, block=True)
+    assert dist.stats.plan_reevals > 0
+    assert max_abs_diff(dist.views, single.views) < 1e-4
+
+
+# -- planner decisions --------------------------------------------------------
+
+
+def test_planner_picks_reeval_past_crossover_and_incremental_below():
+    eng = IncrementalEngine(build_ols_program(96, 48, 1))
+    below = plan_for_engine(eng, WorkloadDescriptor(batch_size=2))
+    assert all(vp.strategy == "incremental" for vp in below.views.values())
+
+    above = plan_for_engine(eng, WorkloadDescriptor(batch_size=10 ** 6))
+    assert all(vp.strategy == "reeval" for vp in above.views.values())
+
+    # boundary check against the cost model, view by view
+    for name, vp in below.views.items():
+        st = eng.program.statement_for(name)
+        from repro.core.cost import expr_cost, shape_of
+        shape = shape_of(st.target, eng.binding)
+        kstar = batch_crossover_rank(shape,
+                                     expr_cost(st.expr, eng.binding).flops)
+        assert vp.crossover_rank == kstar
+        assert below.workload.expected_rank() < kstar
+        assert above.workload.expected_rank() >= kstar
+
+
+def test_planner_straddling_distribution_goes_hybrid():
+    eng = IncrementalEngine(build_ols_program(96, 48, 1))
+    kstars = sorted(vp.crossover_rank for vp in
+                    plan_for_engine(eng, WorkloadDescriptor()).views.values())
+    wl = WorkloadDescriptor(batch_size=kstars[0],
+                            rank_lo=1, rank_hi=kstars[-1] + 1)
+    plan = plan_for_engine(eng, wl)
+    assert any(vp.strategy == "hybrid" for vp in plan.views.values())
+    for vp in plan.views.values():
+        if vp.strategy == "hybrid":
+            assert vp.threshold_rank == vp.crossover_rank
+
+
+def test_cost_scale_lowers_effective_crossover():
+    """cost_scale > 1 (sweep FLOPs measured slower than reeval FLOPs)
+    moves every strategy boundary down by that factor; the raw §7
+    crossover stays in the plan as a diagnostic."""
+    eng = IncrementalEngine(build_ols_program(96, 48, 1))
+    base = plan_for_engine(eng, WorkloadDescriptor(batch_size=8))
+    assert all(vp.strategy == "incremental" for vp in base.views.values())
+
+    kstars = [vp.crossover_rank for vp in base.views.values()]
+    scaled = plan_for_engine(
+        eng, WorkloadDescriptor(batch_size=8, cost_scale=max(kstars)))
+    # effective crossover is now ~1 for every view: all past it
+    assert all(vp.strategy == "reeval" for vp in scaled.views.values())
+    assert [vp.crossover_rank for vp in scaled.views.values()] == kstars
+
+    # hybrid thresholds scale too
+    hyb = plan_for_engine(
+        eng, WorkloadDescriptor(batch_size=1, rank_lo=1, rank_hi=10 ** 6,
+                                cost_scale=4.0))
+    for vp in hyb.views.values():
+        if vp.strategy == "hybrid":
+            assert vp.threshold_rank == max(1, vp.crossover_rank // 4)
+
+
+def test_static_plan_forces_strategy_and_stays_exact():
+    build = lambda: build_ols_program(96, 48, 1)
+    eng = IncrementalEngine(build(), trigger_cache=TriggerCache())
+    eng.set_plan(static_plan(eng, "reeval"))
+    eng.initialize(_ols_inputs(96, 48))
+    ups = _updates(96, 48, 3, seed=77)
+    eng.apply_updates("X", ups, block=True)
+    assert eng.stats.plan_reevals > 0
+
+    ree = ReevalEngine(build())
+    ree.initialize(_ols_inputs(96, 48))
+    for u, v in ups:
+        ree.apply_update("X", jnp.asarray(u), jnp.asarray(v))
+    assert max_abs_diff(eng.views, ree.views, ("beta",)) < 1e-3
+
+
+def test_calibrate_cost_scale_smoke():
+    """The probe returns a positive finite scale and leaves no state
+    behind that would break planning with it."""
+    cache = TriggerCache()
+    scale = calibrate_cost_scale(
+        lambda: IncrementalEngine(build_ols_program(64, 32, 1),
+                                  trigger_cache=cache),
+        _ols_inputs(64, 32), "X", probe_rank=4, samples=2,
+        trigger_cache=cache)
+    assert 0 < scale < float("inf")
+    eng = IncrementalEngine(build_ols_program(64, 32, 1))
+    plan = plan_for_engine(eng, WorkloadDescriptor(batch_size=2,
+                                                   cost_scale=scale))
+    assert set(plan.views) == {"Z", "W", "beta"}
+
+
+def test_plan_json_roundtrip():
+    eng = IncrementalEngine(build_ols_program(96, 48, 1))
+    plan = plan_for_engine(eng, WorkloadDescriptor(batch_size=4,
+                                                   reads_per_firing=0.001))
+    back = MaintenancePlan.from_json(plan.to_json())
+    assert back.views == plan.views
+    assert back.fingerprint == plan.fingerprint
+
+
+def test_plan_json_roundtrip_with_mesh_key():
+    """Distributed plans carry a nested-tuple mesh key; the JSON round
+    trip must restore it exactly (tuples, not lists or mangled str)."""
+    mesh = jax.make_mesh((1,), ("rows",))
+    eng = IncrementalEngine(build_ols_program(96, 48, 1), mesh=mesh)
+    plan = plan_for_engine(eng, WorkloadDescriptor(batch_size=4))
+    assert plan.mesh_key is not None
+    back = MaintenancePlan.from_json(plan.to_json())
+    assert back.mesh_key == plan.mesh_key
+    assert back.workload == plan.workload
+    assert back.views == plan.views
+
+
+def test_plan_fingerprint_mismatch_rejected():
+    eng = IncrementalEngine(build_ols_program(96, 48, 1))
+    other = IncrementalEngine(build_ols_program(64, 32, 1))
+    plan = plan_for_engine(other, WorkloadDescriptor())
+    with pytest.raises(ValueError):
+        eng.set_plan(plan)
+
+
+# -- per-view reeval fallback without a plan (cost flush policy) --------------
+
+
+def test_cost_policy_firing_reevaluates_losing_view():
+    """ROADMAP item: the 'cost' policy used to flush at the crossover but
+    still fire the stacked trigger; the flushed firing must now
+    re-evaluate exactly the views past their crossover."""
+    eng = IncrementalEngine(build_ols_program(96, 48, 1),
+                            flush_policy="cost", flush_age=1e9)
+    eng.initialize(_ols_inputs(96, 48))
+    k_star = eng.cost_flush_rank("X")
+    ups = _updates(96, 48, k_star, seed=61)
+    for u, v in ups:
+        eng.enqueue_update("X", u, v)
+    assert eng.stats.batches_applied == 1
+    assert eng.stats.plan_reevals > 0  # some view fell back to reeval
+
+    ree = ReevalEngine(build_ols_program(96, 48, 1))
+    ree.initialize(_ols_inputs(96, 48))
+    for u, v in ups:
+        ree.apply_update("X", jnp.asarray(u), jnp.asarray(v))
+    assert max_abs_diff(eng.views, ree.views, ("beta",)) < 1e-3
+
+
+# -- lazy materialization -----------------------------------------------------
+
+
+def test_lazy_intermediate_skipped_then_refreshed():
+    """With rare reads the planner unmaterializes Z (no trigger reads
+    it); firings skip its sweep, reads recompute it exactly."""
+    eng0 = IncrementalEngine(build_ols_program(96, 48, 1))
+    plan = plan_for_engine(eng0, WorkloadDescriptor(batch_size=4,
+                                                    reads_per_firing=1e-4))
+    lazies = plan.lazy_views()
+    assert "Z" in lazies          # intermediate nobody reads
+    assert "beta" not in lazies   # outputs always materialize
+
+    eng = IncrementalEngine(build_ols_program(96, 48, 1), plan=plan,
+                            trigger_cache=TriggerCache())
+    eng.initialize(_ols_inputs(96, 48))
+    ups = _updates(96, 48, 4, seed=67)
+    eng.apply_updates("X", ups, block=True)
+    assert eng.stats.lazy_skips > 0
+    assert "Z" in eng._stale
+
+    ree = ReevalEngine(build_ols_program(96, 48, 1))
+    ree.initialize(_ols_inputs(96, 48))
+    for u, v in ups:
+        ree.apply_update("X", jnp.asarray(u), jnp.asarray(v))
+    # output() refreshes stale views transparently
+    assert_close(eng.output("beta"), ree.views["beta"], rtol=1e-3, atol=1e-3)
+    assert not eng._stale
+    assert max_abs_diff(eng.views, ree.views, ("Z", "W", "beta")) < 1e-3
+
+
+def test_stale_lazy_view_recomputed_for_cross_trigger_reeval():
+    """A lazy view left stale by one input's firing must be refreshed
+    inside a LATER firing of a different input whose plan re-evaluates
+    a consumer — the recompute closure may not read the stale value."""
+    from repro.core import Program, dim, matmul
+
+    n = 16
+    prog = Program(name="xtrig")
+    N = dim("n")
+    A = prog.input("A", (N, N))
+    B = prog.input("B", (N, N))
+    L = prog.let("L", matmul(B, B))
+    prog.let("R", matmul(A, L))
+    prog.bind_dims(n=n)
+
+    eng0 = IncrementalEngine(prog, {"A": 1, "B": 1})
+    base = plan_for_engine(eng0, WorkloadDescriptor())
+    # R hybrid w/ threshold 2: the B-firing keeps R incremental (so L's
+    # sweep is skipped and L goes stale), the A-firing crosses the
+    # accumulated-rank threshold and re-evaluates R — reading L
+    plan = MaintenancePlan(
+        fingerprint=base.fingerprint, workload=base.workload,
+        views={"L": replace(base.views["L"], strategy="incremental",
+                            materialize=False),
+               "R": replace(base.views["R"], strategy="hybrid",
+                            threshold_rank=2, materialize=True)})
+    eng = IncrementalEngine(prog, {"A": 1, "B": 1}, plan=plan,
+                            trigger_cache=TriggerCache())
+    rng = np.random.default_rng(11)
+    A0 = rng.normal(size=(n, n)).astype(np.float32)
+    B0 = rng.normal(size=(n, n)).astype(np.float32)
+    eng.initialize({"A": jnp.asarray(A0), "B": jnp.asarray(B0)})
+
+    fac = lambda s: 0.1 * rng.normal(size=(n, 1)).astype(np.float32)
+    u1, v1, u2, v2 = fac(1), fac(2), fac(3), fac(4)
+    eng.apply_update("B", jnp.asarray(u1), jnp.asarray(v1))
+    assert "L" in eng._stale            # lazy skip left L stale
+    eng.apply_update("A", jnp.asarray(u2), jnp.asarray(v2))
+
+    A1 = A0 + u2 @ v2.T
+    B1 = B0 + u1 @ v1.T
+    R_true = A1 @ (B1 @ B1)
+    assert np.abs(np.asarray(eng.views["R"]) - R_true).max() < 1e-4
+    eng.flush(block=True)               # exactness point clears L too
+    assert not eng._stale
+    assert np.abs(np.asarray(eng.views["L"]) - B1 @ B1).max() < 1e-4
+
+
+# -- persistent trigger cache -------------------------------------------------
+
+
+def test_trigger_cache_no_rejit_on_second_engine():
+    """Two engines, identical program/sizes/plan: the second must reuse
+    every compiled trigger — zero new cache entries, so no re-trace and
+    no re-jit (jax's jit cache keys on function identity)."""
+    cache = TriggerCache()
+    wl = WorkloadDescriptor(batch_size=4)
+    ups = _updates(96, 48, 8, seed=71)
+
+    eng1 = IncrementalEngine(build_ols_program(96, 48, 1), plan=wl,
+                             trigger_cache=cache)
+    eng1.initialize(_ols_inputs(96, 48))
+    eng1.apply_update("X", *map(jnp.asarray, ups[0]))
+    eng1.apply_updates("X", ups, block=True)
+    misses_after_first = cache.misses
+    assert misses_after_first > 0
+
+    eng2 = IncrementalEngine(build_ols_program(96, 48, 1), plan=wl,
+                             trigger_cache=cache)
+    eng2.initialize(_ols_inputs(96, 48, seed=1))
+    eng2.apply_update("X", *map(jnp.asarray, ups[0]))
+    eng2.apply_updates("X", ups, block=True)
+    assert cache.misses == misses_after_first  # not a single rebuild
+    assert cache.hits > 0
+    # same function object ⇒ same jax jit cache entry
+    assert eng2._trigger_fns["X"] is eng1._trigger_fns["X"]
+    assert (eng2._batched_trigger_fn("X", 8)
+            is eng1._batched_trigger_fn("X", 8))
+
+    # different sizes → different fingerprint → no false sharing
+    eng3 = IncrementalEngine(build_ols_program(64, 32, 1), plan=wl,
+                             trigger_cache=cache)
+    eng3.initialize(_ols_inputs(64, 32))
+    eng3.apply_update("X", *map(jnp.asarray, _updates(64, 32, 1, seed=3)[0]))
+    assert cache.misses > misses_after_first
+
+
+def test_trigger_cache_spans_mesh_key():
+    """Identical 1-device meshes share distributed planned triggers
+    through the cache; the mesh key tells them apart from the
+    single-device entries."""
+    cache = TriggerCache()
+    build, inputs_fn, name, n, m = PROGRAMS["powers"]
+    wl = WorkloadDescriptor(batch_size=100000)
+    ups = _updates(n, m, 2, seed=73)
+
+    mesh1 = jax.make_mesh((1,), ("rows",))
+    e1 = IncrementalEngine(build(), mesh=mesh1, plan=wl, trigger_cache=cache)
+    e1.initialize(inputs_fn())
+    e1.apply_updates(name, ups, block=True)
+    misses = cache.misses
+
+    mesh2 = jax.make_mesh((1,), ("rows",))
+    e2 = IncrementalEngine(build(), mesh=mesh2, plan=wl, trigger_cache=cache)
+    e2.initialize(inputs_fn())
+    e2.apply_updates(name, ups, block=True)
+    assert cache.misses == misses  # same mesh key → shared triggers
+    assert max_abs_diff(e1.views, e2.views) < 1e-4
+
+
+# -- adaptive re-planning -----------------------------------------------------
+
+
+def test_adaptive_planner_replans_on_drift():
+    planner = AdaptivePlanner(WorkloadDescriptor(batch_size=1),
+                              replan_every=4)
+    eng = IncrementalEngine(build_ols_program(96, 48, 1), plan=planner,
+                            trigger_cache=TriggerCache())
+    eng.initialize(_ols_inputs(96, 48))
+    assert all(vp.strategy == "incremental"
+               for vp in eng.plan.views.values())
+
+    for i in range(4):  # matches the declared workload: no replan
+        eng.apply_updates("X", _updates(96, 48, 1, seed=80 + i))
+    assert eng.stats.replans == 0
+
+    for i in range(8):  # drift: firings far past every crossover
+        eng.apply_updates("X", _updates(96, 48, 160, seed=90 + i))
+    assert eng.stats.replans >= 1
+    assert any(vp.strategy != "incremental"
+               for vp in eng.plan.views.values())
+
+    # exactness is preserved across the hot-swap
+    ree = ReevalEngine(build_ols_program(96, 48, 1))
+    ree.initialize(_ols_inputs(96, 48))
+    for i in range(4):
+        for u, v in _updates(96, 48, 1, seed=80 + i):
+            ree.apply_update("X", jnp.asarray(u), jnp.asarray(v))
+    for i in range(8):
+        for u, v in _updates(96, 48, 160, seed=90 + i):
+            ree.apply_update("X", jnp.asarray(u), jnp.asarray(v))
+    eng.refresh()
+    assert max_abs_diff(eng.views, ree.views, ("beta",)) < 5e-3
+
+
+def test_adaptive_planner_observes_per_update_path():
+    """apply_update (non-batched) firings feed the observation loop too
+    — a serving client driving single updates still gets re-planning."""
+    planner = AdaptivePlanner(WorkloadDescriptor(batch_size=100000),
+                              replan_every=4)
+    eng = IncrementalEngine(build_ols_program(96, 48, 1), plan=planner,
+                            trigger_cache=TriggerCache())
+    eng.initialize(_ols_inputs(96, 48))
+    assert all(vp.strategy == "reeval" for vp in eng.plan.views.values())
+    for u, v in _updates(96, 48, 8, seed=83):  # drift: rank-1 stream
+        eng.apply_update("X", jnp.asarray(u), jnp.asarray(v))
+    assert eng.stats.replans >= 1
+    assert any(vp.strategy == "incremental"
+               for vp in eng.plan.views.values())
+
+
+def test_set_plan_syncs_adaptive_planner():
+    """A hot-swapped external plan becomes the planner's baseline — the
+    next drift check must not silently revert it."""
+    planner = AdaptivePlanner(WorkloadDescriptor(batch_size=1))
+    eng = IncrementalEngine(build_ols_program(96, 48, 1), plan=planner,
+                            trigger_cache=TriggerCache())
+    swapped = plan_for_engine(eng, WorkloadDescriptor(batch_size=100000))
+    eng.set_plan(swapped)
+    assert planner.plan is swapped
+    assert planner.workload == swapped.workload
+
+
+def test_adaptive_planner_binding_guard():
+    planner = AdaptivePlanner(WorkloadDescriptor())
+    IncrementalEngine(build_ols_program(96, 48, 1), plan=planner)
+    with pytest.raises(ValueError):
+        IncrementalEngine(build_ols_program(64, 32, 1), plan=planner)
+
+
+# -- serving hot-swap contract ------------------------------------------------
+
+
+def test_logit_view_replan_keeps_staleness_contract(rng):
+    from repro.serve.incremental_views import IncrementalLogitView
+    H = rng.normal(size=(40, 16)).astype(np.float32)
+    W = rng.normal(size=(10, 16)).astype(np.float32)
+    view = IncrementalLogitView(H, W, flush_size=3, flush_age=1e9)
+    ups = [(0.05 * rng.normal(size=(10, 1)).astype(np.float32),
+            0.05 * rng.normal(size=(16, 1)).astype(np.float32))
+           for _ in range(3)]
+    assert not view.submit_head_update(*ups[0])
+    assert not view.submit_head_update(*ups[1])
+    assert view.pending_updates == 2
+
+    # re-plan mid-stream: pending deltas survive the swap
+    plan = view.replan(WorkloadDescriptor(batch_size=2))
+    assert view.engine.plan is plan
+    assert view.pending_updates == 2
+
+    assert view.submit_head_update(*ups[2])  # flush_size still trips
+    assert view.pending_updates == 0
+    W_new = W + sum(u @ v.T for u, v in ups)
+    assert_close(view.logits, H @ W_new.T, rtol=1e-3, atol=1e-3)
+
+
+def test_serve_engine_replan_views(rng):
+    """ServeEngine.replan_views hot-swaps a plan into every attached
+    logit view without touching their queues."""
+    from repro.serve.engine import ServeEngine
+    from repro.serve.incremental_views import IncrementalLogitView
+
+    class _Stub(ServeEngine):  # avoid building an LM for a plan test
+        def __init__(self):
+            self._logit_views = {}
+
+    eng = _Stub()
+    H = rng.normal(size=(24, 8)).astype(np.float32)
+    W = rng.normal(size=(6, 8)).astype(np.float32)
+    eng._logit_views["lm_head"] = IncrementalLogitView(H, W, flush_size=8,
+                                                       flush_age=1e9)
+    eng._logit_views["lm_head"].submit_head_update(
+        0.1 * rng.normal(size=(6, 1)).astype(np.float32),
+        0.1 * rng.normal(size=(8, 1)).astype(np.float32))
+    plans = eng.replan_views(WorkloadDescriptor(batch_size=4))
+    assert set(plans) == {"lm_head"}
+    assert eng._logit_views["lm_head"].pending_updates == 1
