@@ -1,0 +1,234 @@
+"""Chaos acceptance benchmark for repro.guard (ISSUE 6 smoke gate).
+
+Two measurements, emitted to ``BENCH_guard.json``:
+
+  1. **Chaos convergence** — OLS and matrix-powers engines run ≥500
+     zipf-skewed rank-1 firings under ``ChaosConfig(poison_p=0.01,
+     trigger_raise_p=0.005)`` with the full guard stack (validation +
+     transactional firings + drift sentinel).  The run asserts the
+     acceptance criteria directly: the store never goes non-finite,
+     every injected fault is either quarantined or rolled back, and
+     the final views match a from-scratch re-evaluation within the
+     sentinel tolerance (``max_abs_diff`` / relative Frobenius both
+     reported).
+
+  2. **Clean-path overhead** — guarded vs unguarded engines on a
+     fault-free stream through the *batched serving pipeline*
+     (``apply_updates``, rank-64T firings — the production path from
+     the PR 1 trigger pipeline) at serving-scale views.  The guard's
+     fused finite-check + select-commit must cost <10% of per-firing
+     wall clock there.  The check reads every written view once per
+     firing, a fixed cost the batch amortises across its T updates —
+     which is why the gate lives on the batched path: a *rank-1*
+     firing on CPU is itself memory-bound at roughly the check's own
+     traffic, so per-update firings see 20–40% overhead no matter how
+     the guard is engineered (measured and documented in
+     docs/robustness.md, not gated).
+
+``--quick`` shrinks chaos sizes and overhead windows for the CI smoke
+budget while keeping the ≥500-firing chaos criterion and the overhead
+gate's serving-scale sizes intact.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+import time
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.apps.matrix_powers import build_powers_program
+from repro.apps.ols import build_ols_program
+from repro.core.codegen import evaluate
+from repro.core.runtime import IncrementalEngine
+from repro.data.updates import UpdateStream
+from repro.guard import ChaosConfig, GuardConfig, SentinelConfig
+
+try:  # runnable both as a module and as a script
+    from .common import emit
+except ImportError:  # pragma: no cover
+    from common import emit
+
+CHAOS = ChaosConfig(seed=0, poison_p=0.01, poison_kind="nan",
+                    trigger_raise_p=0.005)
+
+
+def _program(family: str, quick: bool):
+    if family == "ols":
+        m, n = (96, 12) if quick else (256, 32)
+        prog = build_ols_program(m, n, 2)
+        rng = np.random.default_rng(0)
+        inputs = {"X": rng.standard_normal((m, n)).astype(np.float32),
+                  "Y": rng.standard_normal((m, 2)).astype(np.float32)}
+        return prog, inputs, "X", (m, n)
+    n = 24 if quick else 64
+    prog = build_powers_program(k=4, n=n, model="exp")
+    rng = np.random.default_rng(0)
+    a = rng.standard_normal((n, n)).astype(np.float32)
+    a *= 0.9 / max(abs(np.linalg.eigvals(a)))
+    return prog, {"A": a}, "A", (n, n)
+
+
+def _reference_views(engine):
+    env = {k: engine.views[k] for k in engine.program.inputs}
+    for st in engine.program.statements:
+        env[st.target.name] = evaluate(st.expr, env, engine.binding)
+    return env
+
+
+def chaos_run(family: str, firings: int, quick: bool) -> Dict[str, object]:
+    prog, inputs, input_name, (rows, cols) = _program(family, quick)
+    eng = IncrementalEngine(
+        prog, guard=GuardConfig(sentinel=SentinelConfig(probe_every=100)),
+        chaos=CHAOS)
+    eng.initialize(inputs)
+    stream = UpdateStream(n=rows, m=cols, scale=0.005, seed=11, zipf=1.5)
+    it = iter(stream)
+    t0 = time.perf_counter()
+    for i in range(firings):
+        u, v = next(it)
+        eng.apply_update(input_name, u, v)
+        assert all(bool(jnp.isfinite(a).all())
+                   for a in eng.views.values()), \
+            f"{family}: non-finite view served at firing {i}"
+    jax.block_until_ready(eng.views)
+    wall = time.perf_counter() - t0
+
+    eng.guard.sync()
+    g = eng.guard.stats
+    assert eng.chaos.poisoned > 0 and eng.chaos.raises > 0, \
+        f"{family}: chaos never fired — run is vacuous"
+    assert g.quarantined == eng.chaos.poisoned
+    assert g.rollbacks == eng.chaos.raises, \
+        f"{family}: {eng.chaos.raises} faults but {g.rollbacks} rollbacks"
+
+    ref = _reference_views(eng)
+    tol = eng.guard.sentinel.config.tol
+    max_abs = max_rel = 0.0
+    for st in prog.statements:
+        name = st.target.name
+        r = np.asarray(ref[name], np.float64)
+        c = np.asarray(eng.views[name], np.float64)
+        max_abs = max(max_abs, float(np.max(np.abs(r - c))))
+        rel = np.linalg.norm(r - c) / max(np.linalg.norm(r), 1e-30)
+        max_rel = max(max_rel, float(rel))
+        assert rel <= tol, \
+            f"{family}/{name}: drift {rel:.2e} exceeds sentinel tol {tol}"
+
+    emit(f"guard_chaos_{family}", wall / firings * 1e6,
+         f"poisoned={eng.chaos.poisoned};raises={eng.chaos.raises};"
+         f"rollbacks={g.rollbacks};max_rel_drift={max_rel:.2e}")
+    return {
+        "firings": firings,
+        "us_per_firing": wall / firings * 1e6,
+        "poisoned": eng.chaos.poisoned,
+        "trigger_faults": eng.chaos.raises,
+        "quarantined": g.quarantined,
+        "rollbacks": g.rollbacks,
+        "admitted": g.admitted,
+        "sentinel_probes": g.probes,
+        "drift_recoveries": g.drift_recoveries,
+        "max_abs_diff_vs_reeval": max_abs,
+        "max_rel_drift_vs_reeval": max_rel,
+        "sentinel_tol": tol,
+    }
+
+
+def _serving_program(family: str):
+    """Serving-scale programs for the overhead gate (bigger than the
+    chaos sizes: the gate belongs where real per-firing work lives)."""
+    rng = np.random.default_rng(0)
+    if family == "ols":
+        m, n = 1024, 96
+        prog = build_ols_program(m, n, 2)
+        inputs = {"X": rng.standard_normal((m, n)).astype(np.float32),
+                  "Y": rng.standard_normal((m, 2)).astype(np.float32)}
+        return prog, inputs, "X", (m, n)
+    n = 192
+    prog = build_powers_program(k=4, n=n, model="exp")
+    a = rng.standard_normal((n, n)).astype(np.float32)
+    a *= 0.9 / max(abs(np.linalg.eigvals(a)))
+    return prog, {"A": a}, "A", (n, n)
+
+
+def overhead_run(family: str, quick: bool) -> Dict[str, float]:
+    """Guarded vs unguarded per-firing wall clock on a clean batched
+    stream (T=64 updates per firing through ``apply_updates``).
+
+    Every firing is blocked, so the metric includes the device work the
+    guard adds (the fused finite-check + select-commit), not just host
+    dispatch.  The two engines are timed in fully *interleaved*
+    windows (best-of-N each) so slow container phases hit both paths
+    instead of biasing one — the ±30% system noise between two
+    back-to-back full runs would otherwise dwarf the guard's real
+    cost.  ``--quick`` keeps the serving-scale sizes (smaller ones
+    exaggerate the guard's fixed per-firing cost and would make the
+    gate dishonest) and trims windows instead.
+    """
+    prog, inputs, input_name, (rows, cols) = _serving_program(family)
+
+    def mk(guarded: bool):
+        p, ins, _, _ = _serving_program(family)
+        eng = IncrementalEngine(
+            p, guard=GuardConfig() if guarded else None)
+        eng.initialize(ins)
+        return eng
+
+    eng_plain, eng_guard = mk(False), mk(True)
+    t_batch, n_batches, reps = 64, (8 if quick else 15), (6 if quick else 12)
+    it = iter(UpdateStream(n=rows, m=cols, scale=0.005, seed=5))
+    batches = [[next(it) for _ in range(t_batch)] for _ in range(n_batches)]
+
+    def window(eng) -> float:
+        t0 = time.perf_counter()
+        for b in batches:
+            eng.apply_updates(input_name, b, block=True)
+        return (time.perf_counter() - t0) / n_batches
+
+    window(eng_plain)  # warmup: trigger jit + fused-check jit
+    window(eng_guard)
+    t_plain = t_guard = float("inf")
+    for _ in range(reps):
+        t_plain = min(t_plain, window(eng_plain))
+        t_guard = min(t_guard, window(eng_guard))
+    overhead = t_guard / t_plain - 1.0
+    emit(f"guard_overhead_{family}", t_guard * 1e6,
+         f"plain_us={t_plain*1e6:.1f};overhead={overhead*100:.1f}%;"
+         f"batch_T={t_batch}")
+    return {"plain_us": t_plain * 1e6, "guarded_us": t_guard * 1e6,
+            "batch_T": t_batch, "overhead_frac": overhead}
+
+
+def main(quick: bool = False):
+    firings = 500  # the acceptance criterion floor, quick or not
+    results: Dict[str, object] = {
+        "config": {"quick": quick, "firings": firings,
+                   "chaos": {"seed": CHAOS.seed, "poison_p": CHAOS.poison_p,
+                             "trigger_raise_p": CHAOS.trigger_raise_p},
+                   "backend": jax.default_backend()},
+    }
+    for family in ("ols", "powers"):
+        results[family] = {
+            "chaos": chaos_run(family, firings, quick),
+            "overhead": overhead_run(family, quick),
+        }
+    worst = max(results[f]["overhead"]["overhead_frac"]
+                for f in ("ols", "powers"))
+    results["worst_overhead_frac"] = worst
+    with open("BENCH_guard.json", "w") as f:
+        json.dump(results, f, indent=2)
+    print(f"wrote BENCH_guard.json (worst clean-path overhead "
+          f"{worst*100:.1f}%)")
+    if worst >= 0.10:
+        print(f"FAIL: guard overhead {worst*100:.1f}% >= 10% budget",
+              file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(quick="--quick" in sys.argv))

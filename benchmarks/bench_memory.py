@@ -23,9 +23,11 @@ def main(k: int = 16):
     for n in (128, 256, 512):
         app = MatrixPowers(n=n, k=k, model="exp")
         app.initialize(MatrixPowers.synthesize(n, seed=0))
-        stream = UpdateStream(n=n, m=n, scale=0.02, seed=3)
-        t_incr = time_updates(app.update, stream)
-        t_reeval = time_updates(app.update_reeval, stream)
+        # fresh same-seed streams: the shared generator advances per draw
+        t_incr = time_updates(app.update,
+                              UpdateStream(n=n, m=n, scale=0.02, seed=3))
+        t_reeval = time_updates(app.update_reeval,
+                                UpdateStream(n=n, m=n, scale=0.02, seed=3))
         mem_incr = view_bytes(app.engine)
         mem_reeval = view_bytes(app.reeval) * (2 / len(app.engine.views))
         # reeval only needs A and the running square (2 matrices)

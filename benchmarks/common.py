@@ -54,9 +54,15 @@ def bench_app(name: str, app, n: int, m: Optional[int] = None,
               extra: str = "") -> Dict[str, float]:
     """Times INCR and REEVAL paths of an App; returns seconds per update."""
     m = m if m is not None else n
-    stream = UpdateStream(n=n, m=m, scale=scale, seed=7)
-    t_incr = time_updates(app.update, stream, n_updates)
-    t_reeval = time_updates(app.update_reeval, stream, n_updates)
+    # fresh same-seed streams per path: UpdateStream's shared generator
+    # advances on every draw, and the comparison needs both paths to
+    # see the identical update sequence
+    t_incr = time_updates(app.update,
+                          UpdateStream(n=n, m=m, scale=scale, seed=7),
+                          n_updates)
+    t_reeval = time_updates(app.update_reeval,
+                            UpdateStream(n=n, m=m, scale=scale, seed=7),
+                            n_updates)
     speedup = t_reeval / t_incr
     emit(f"{name}_incr", t_incr * 1e6, f"speedup={speedup:.2f}x{extra}")
     emit(f"{name}_reeval", t_reeval * 1e6, extra.lstrip(";"))

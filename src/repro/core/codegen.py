@@ -136,6 +136,25 @@ def _get_apply_fn(backend: str):
     raise ValueError(f"unknown apply backend {backend!r}")
 
 
+@functools.lru_cache(maxsize=256)
+def _finite_check_jit(names: Tuple[str, ...]) -> Callable:
+    def check(views: Env) -> Array:
+        return jnp.stack([jnp.isfinite(views[n]).all() for n in names])
+    return jax.jit(check)
+
+
+def build_finite_check(names) -> Callable:
+    """Jitted fused finiteness probe over the views in ``names``.
+
+    Returns ``fn(views) -> bool[len(names)]`` (True = all-finite), one
+    fused XLA program and one device sync for the whole set — the
+    post-firing output validation (:func:`repro.guard.txn.check_finite`)
+    runs this on every guarded firing, so it must not retrace or probe
+    view-by-view.  Cached on the name tuple; views may hold extra keys.
+    """
+    return _finite_check_jit(tuple(names))
+
+
 def trigger_touched_views(trigger: Trigger) -> Tuple[Tuple[str, ...],
                                                      Tuple[str, ...]]:
     """(written, read-only) view names a trigger actually touches.

@@ -96,6 +96,36 @@ def _node_cost(x: Expr, binding) -> Cost:
     return Cost.zero()
 
 
+def expr_cost_kinds(e: Expr, binding: Dict[str, int]) -> Dict[str, float]:
+    """CSE-aware FLOPs of ``e`` bucketed by op kind: ``"matmul"``,
+    ``"inverse"``, ``"other"``.
+
+    Wall-clock per FLOP differs wildly between kinds — a BLAS3 matmul
+    streams at machine peak while an n×n factorization (``Inverse``) and
+    elementwise traffic run far below it — so a planner comparing
+    trigger FLOPs against re-evaluation FLOPs needs per-kind scales, not
+    one global fudge factor (see
+    :attr:`repro.plan.WorkloadDescriptor.op_cost_scales`).
+    """
+    kinds = {"matmul": 0.0, "inverse": 0.0, "other": 0.0}
+    seen: Dict[int, bool] = {}
+    stack = [e]
+    while stack:
+        x = stack.pop()
+        if id(x) in seen:
+            continue
+        seen[id(x)] = True
+        stack.extend(x.children)
+        flops = _node_cost(x, binding).flops
+        if isinstance(x, ex.MatMul):
+            kinds["matmul"] += flops
+        elif isinstance(x, ex.Inverse):
+            kinds["inverse"] += flops
+        else:
+            kinds["other"] += flops
+    return kinds
+
+
 def lowrank_cost(d: LowRank, binding: Dict[str, int]) -> Cost:
     """Cost of evaluating every factor block of a factored delta."""
     total = Cost.zero()

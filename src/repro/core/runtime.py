@@ -64,6 +64,12 @@ class EngineStats:
     plan_reevals: int = 0         # views re-evaluated inside planned firings
     lazy_skips: int = 0           # unmaterialized views left stale by firings
     replans: int = 0              # adaptive plan hot-swaps
+    # FLOPs behind the timed seconds above — the observed wall-clock
+    # rates (trigger_seconds/sweep_flops_timed vs
+    # reeval_seconds/reeval_flops_timed) are what
+    # AdaptivePlanner.refit_from_stats turns into an online cost_scale.
+    sweep_flops_timed: float = 0.0
+    reeval_flops_timed: float = 0.0
 
     def per_update_seconds(self) -> float:
         return self.trigger_seconds / max(self.updates_timed, 1)
@@ -87,7 +93,9 @@ class IncrementalEngine:
                  mesh=None,
                  mesh_axis: Optional[str] = None,
                  plan=None,
-                 trigger_cache=None):
+                 trigger_cache=None,
+                 guard=None,
+                 chaos=None):
         """``flush_policy`` picks how :meth:`enqueue_update` decides to
         flush: ``"fixed"`` trips on the ``flush_size``/``flush_age``
         thresholds; ``"cost"`` asks the §4/§7 cost model instead — the
@@ -109,6 +117,16 @@ class IncrementalEngine:
         ``trigger_cache`` (default: the process-global
         :func:`repro.plan.global_trigger_cache`), so a second engine
         with an identical plan key never re-jits.
+
+        ``guard`` attaches the :mod:`repro.guard` failure-containment
+        layer (a :class:`~repro.guard.GuardConfig`, or ``True`` for the
+        defaults): update validation + quarantine at every admission
+        point, transactional firings (snapshot → validate outputs →
+        atomic rollback), and an optional drift sentinel.  ``chaos``
+        (a :class:`~repro.guard.ChaosConfig` or shared
+        :class:`~repro.guard.ChaosMonkey`) injects deterministic
+        faults — update poisoning and in-trigger raises — so the guard's
+        recovery paths are exercised, not trusted.
         """
         if flush_policy not in ("fixed", "cost"):
             raise ValueError(f"unknown flush_policy {flush_policy!r}")
@@ -159,6 +177,30 @@ class IncrementalEngine:
         self._pending_since: Dict[str, float] = {}
         self.views: Dict[str, Array] = {}
         self.stats = EngineStats()
+        # failure containment (repro.guard): imported lazily so unguarded
+        # engines never pay the import and the core↔guard layering stays
+        # one-directional at module load.
+        self.chaos = None
+        self.guard = None
+        if chaos is not None:
+            from repro.guard import as_monkey
+            self.chaos = as_monkey(chaos)
+        if guard is not None:
+            from repro.guard import EngineGuard, GuardConfig
+            if guard is True:
+                guard = GuardConfig()
+            if donate and guard.transactional:
+                raise ValueError(
+                    "guard+donate are incompatible: transactional firings "
+                    "keep the pre-firing view buffers alive for rollback, "
+                    "and donation would let XLA overwrite them")
+            self.guard = EngineGuard(guard, self)
+        # whether guarded firings take the fused in-program path (trigger
+        # + finite-check + select-commit in one dispatch) — admission can
+        # then defer its own finite screen into that same program
+        self._guard_fast_path = (
+            self.guard is not None and self.guard.fused_path_ok
+            and self.plan is None and self.flush_policy != "cost")
 
     def _build_trigger(self, trig) -> Callable:
         """Single-device jitted trigger, or the row-sharded distributed
@@ -205,6 +247,15 @@ class IncrementalEngine:
         if self._trigger_cache is None:
             self._trigger_cache = global_trigger_cache()
         self.plan = plan
+        # planned firings leave the guard's fused fast path (their
+        # per-view partitioning runs under the snapshot/rollback path);
+        # getattr: set_plan also runs mid-__init__, before the guard
+        # (and flush policy) fields exist
+        guard = getattr(self, "guard", None)
+        self._guard_fast_path = (
+            guard is not None and guard.fused_path_ok
+            and self.plan is None
+            and getattr(self, "flush_policy", None) != "cost")
         if self.planner is not None and self.planner.plan is not plan:
             # keep the attached adaptive planner's baseline in sync so
             # its next drift check does not silently revert a hot-swap
@@ -315,12 +366,38 @@ class IncrementalEngine:
             lazy_views=lazy, jit=self._jit,
             apply_backend=self._apply_backend, donate=self._donate)
 
-    def _fire(self, input_name: str, bucket: int, P: Array, Q: Array) -> None:
+    def _fire(self, input_name: str, bucket: int, P: Array, Q: Array,
+              screened: bool = False) -> None:
+        """One trigger firing, transactional when the engine is guarded:
+        snapshot → (chaos) → execute → validate outputs → commit, with
+        an atomic rollback on any failure (:mod:`repro.guard.txn`).
+
+        ``screened=True`` promises the factors already passed the host
+        NaN/Inf screen (batch admission), so the fused fast path can
+        drop its redundant in-program input screen — one fewer full
+        pass over ``(P, Q)`` on device."""
+        if self.guard is not None:
+            return self.guard.fire(self, input_name, bucket, P, Q,
+                                   screened=screened)
+        if self.chaos is not None:
+            # unguarded chaos: the injected fault propagates, exactly as
+            # a real kernel error would without the guard layer
+            self.chaos.maybe_raise_in_trigger()
+        return self._fire_inner(input_name, bucket, P, Q)
+
+    def _fire_inner(self, input_name: str, bucket: int, P: Array,
+                    Q: Array) -> None:
         """One (possibly planned) trigger firing at stacked rank
         ``bucket``: partition views per the plan, execute, and keep the
         hybrid/lazy bookkeeping current."""
         reeval, lazy = self._plan_decision(input_name, bucket)
-        P, Q = jnp.asarray(P), jnp.asarray(Q)
+        # numpy factors go straight into the jitted trigger: its C++
+        # argument path converts (and canonicalizes) them far cheaper
+        # than an explicit host-side jnp.asarray/device_put round
+        if not self._jit:  # unjitted bodies still need real jax arrays
+            P, Q = jnp.asarray(P), jnp.asarray(Q)
+        elif isinstance(P, (list, tuple)) or isinstance(Q, (list, tuple)):
+            P, Q = np.asarray(P), np.asarray(Q)  # jit rejects raw lists
         if not reeval and not lazy:
             fn = self._batched_trigger_fn(input_name, bucket)
             self.views = fn(self.views, P, Q)
@@ -379,21 +456,49 @@ class IncrementalEngine:
     def apply_update(self, input_name: str, u: Array, v: Array,
                      block: bool = False) -> Dict[str, Array]:
         """Fire the trigger for ``input_name += u @ v.T`` (executing the
-        engine's maintenance plan, when one is attached)."""
-        t0 = time.perf_counter()
+        engine's maintenance plan, when one is attached).
+
+        On a guarded engine the update is validated first (rejects go
+        to quarantine, views untouched) and the firing is transactional
+        (a chaos fault or non-finite output rolls back and returns the
+        pre-firing views)."""
         rank = self.compiled.triggers[input_name].rank
-        if self.plan is None and self.flush_policy != "cost":
+        if self.chaos is not None:
+            u, v = self.chaos.poison_update(u, v)
+        if self.guard is not None:
+            admitted = self.guard.admit(input_name, u, v,
+                                        defer_finite=self._guard_fast_path)
+            if admitted is None:
+                return self.views
+            u, v = admitted
+        t0 = time.perf_counter()
+        if self.guard is not None or self.chaos is not None:
+            from repro.guard.txn import FiringAborted
+            try:
+                self._fire(input_name, rank, u, v)
+            except FiringAborted as e:
+                self.guard.on_abort(input_name, u, v, e.reason)
+                return self.views
+        elif self.plan is None and self.flush_policy != "cost":
             fn = self._trigger_fns[input_name]
-            self.views = fn(self.views, jnp.asarray(u), jnp.asarray(v))
+            # np factors feed the jit directly — see _fire_inner
+            if not self._jit:
+                u, v = jnp.asarray(u), jnp.asarray(v)
+            elif isinstance(u, (list, tuple)) or isinstance(v, (list, tuple)):
+                u, v = np.asarray(u), np.asarray(v)
+            self.views = fn(self.views, u, v)
         else:
             self._fire(input_name, rank, u, v)
         if block:
             jax.block_until_ready(self.views)
             self.stats.trigger_seconds += time.perf_counter() - t0
             self.stats.updates_timed += 1
+            self.stats.sweep_flops_timed += self._sweep_flops(input_name, rank)
         self.stats.updates_applied += 1
         self.stats.triggers_fired += 1
         self._observe_firing(input_name, rank, 1)
+        if self.guard is not None:
+            self.guard.after_firing(self)
         return self.views
 
     # -- batched incremental path ---------------------------------------------
@@ -414,29 +519,67 @@ class IncrementalEngine:
             raise KeyError(f"no trigger for input {input_name!r}; have "
                            f"{sorted(self.compiled.triggers)}")
         updates = list(updates)
+        if self.chaos is not None:
+            updates = [self.chaos.poison_update(u, v) for u, v in updates]
         if not updates:
             return self.views
+        t0 = time.perf_counter()  # before admission+stacking: host-side
+        # concat (and any device sync from jax-array factors) is part of
+        # the batch cost — the guard's fast path fuses admission INTO
+        # the concat the trigger needs anyway
+        P = Q = None
+        if self.guard is not None:
+            stacked = self.guard.admit_batch_stacked(input_name, updates)
+            if stacked is not None:
+                P, Q = stacked
+            else:
+                # careful walk: one poisoned update quarantines alone
+                # and the healthy remainder still batches
+                updates = self.guard.admit_batch(input_name, updates)
+                if not updates:
+                    return self.views
         t_count = len(updates)
-        t0 = time.perf_counter()  # before stacking: host-side concat (and
-        # any device sync from jax-array factors) is part of the batch cost
-        P, Q = stack_update_arrays(updates)
+        if P is None:
+            P, Q = stack_update_arrays(updates)
         stacked_rank = P.shape[1]
         if self.max_batch_rank is not None and P.shape[1] > self.max_batch_rank:
             P, Q = recompress_factors(P, Q, max_rank=self.max_batch_rank,
                                       tol=self.recompress_tol)
             self.stats.recompressions += 1
+        P0, Q0 = P, Q  # pre-padding factors (what a rollback quarantines)
         bucket = batch_bucket(P.shape[1])
         P, Q = pad_factors_to_rank(P, Q, bucket)
-        self._fire(input_name, bucket, P, Q)
+        if self.guard is not None or self.chaos is not None:
+            from repro.guard.txn import FiringAborted
+            try:
+                # batch admission already host-screened the factors
+                self._fire(input_name, bucket, P, Q, screened=True)
+            except FiringAborted as e:
+                self.guard.on_abort(input_name, P0, Q0, e.reason)
+                return self.views
+        else:
+            self._fire(input_name, bucket, P, Q)
         if block:
             jax.block_until_ready(self.views)
             self.stats.trigger_seconds += time.perf_counter() - t0
             self.stats.updates_timed += t_count
+            self.stats.sweep_flops_timed += self._sweep_flops(input_name,
+                                                              bucket)
         self.stats.updates_applied += t_count
         self.stats.triggers_fired += 1
         self.stats.batches_applied += 1
         self._observe_firing(input_name, stacked_rank, t_count)
+        if self.guard is not None:
+            self.guard.after_firing(self)
         return self.views
+
+    def _sweep_flops(self, input_name: str, rank: int) -> float:
+        """FLOPs of one factored sweep over this trigger's maintained
+        views at stacked rank ``rank`` — the denominator behind
+        ``stats.trigger_seconds`` that online cost_scale refitting
+        (:meth:`repro.plan.AdaptivePlanner.refit_from_stats`) divides by."""
+        return sum(2.0 * rank * n * m for _, (n, m), _
+                   in self._factored_view_costs(input_name))
 
     def _observe_firing(self, input_name: str, stacked_rank: int,
                         t_count: int) -> None:
@@ -445,6 +588,8 @@ class IncrementalEngine:
         if self.planner is None:
             return
         self.planner.observe(input_name, stacked_rank, t_count)
+        if hasattr(self.planner, "refit_from_stats"):
+            self.planner.refit_from_stats(self.stats)
         new_plan = self.planner.maybe_replan()
         if new_plan is not None:
             self.set_plan(new_plan)
@@ -483,6 +628,13 @@ class IncrementalEngine:
                            f"{sorted(self.compiled.triggers)}")
         u = np.asarray(u, dtype=np.float32)
         v = np.asarray(v, dtype=np.float32)
+        if self.chaos is not None:
+            u, v = self.chaos.poison_update(u, v)
+        if self.guard is not None:
+            admitted = self.guard.admit(input_name, u, v)
+            if admitted is None:
+                return None
+            u, v = admitted
         q = self._pending.setdefault(input_name, [])
         if not q:
             self._pending_since[input_name] = time.perf_counter()
@@ -578,6 +730,7 @@ class IncrementalEngine:
         if block:
             jax.block_until_ready(computed)
             self.stats.reeval_seconds += time.perf_counter() - t0
+            self.stats.reeval_flops_timed += self.reeval_flops()
         self.views.update(computed)
         self._stale.clear()
         self._accum_rank.clear()

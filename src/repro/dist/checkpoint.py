@@ -36,6 +36,13 @@ elastic resize needs no extra machinery.
 Garbage collection keeps the last ``keep`` checkpoints *plus any base a
 kept incremental (transitively) depends on* — an incremental whose base
 was collected would be unrestorable.
+
+Every payload array is written with a CRC32 content checksum in the
+manifest; :meth:`CheckpointManager.restore` verifies them and, when a
+checkpoint (or its chain) is corrupt, falls back to the newest earlier
+step that reconstructs intact (``last_restored_step`` records which one
+actually loaded — callers resuming training should trust it over
+``latest_step``).
 """
 
 from __future__ import annotations
@@ -43,6 +50,7 @@ from __future__ import annotations
 import json
 import os
 import threading
+import zlib
 from concurrent.futures import Future, ThreadPoolExecutor
 from typing import Any, Dict, List, Optional, Tuple
 
@@ -52,6 +60,15 @@ import numpy as np
 
 FORMAT_VERSION = 1
 _PREFIX = "ckpt_"
+
+
+class CheckpointCorruptError(RuntimeError):
+    """A checkpoint's payload failed checksum verification (or could not
+    be decoded at all)."""
+
+
+def _crc(x: np.ndarray) -> int:
+    return zlib.crc32(np.ascontiguousarray(x).tobytes())
 
 
 def _leaf_paths(tree: Any) -> List[Tuple[str, Any]]:
@@ -116,12 +133,16 @@ class CheckpointManager:
                         leaf's delta abandons the sketch and stores raw.
     min_dim:            matrix leaves smaller than this on either side
                         are never sketched (factors would not pay).
+    chaos:              optional :class:`repro.guard.ChaosConfig` /
+                        ``ChaosMonkey`` — corrupts written payloads with
+                        probability ``corrupt_checkpoint_p`` (testing the
+                        checksum/fallback path).
     """
 
     def __init__(self, directory: str, *, async_save: bool = True,
                  keep: int = 5, incremental_rank: Optional[int] = None,
                  full_every: int = 10, max_rel_err: float = 1e-3,
-                 min_dim: int = 8):
+                 min_dim: int = 8, chaos: Any = None):
         self.directory = directory
         os.makedirs(directory, exist_ok=True)
         self.keep = keep
@@ -129,6 +150,13 @@ class CheckpointManager:
         self.full_every = full_every
         self.max_rel_err = max_rel_err
         self.min_dim = min_dim
+        self._chaos = None
+        if chaos is not None:
+            from repro.guard import as_monkey
+            self._chaos = as_monkey(chaos)
+        #: the step the most recent :meth:`restore` actually loaded —
+        #: may be earlier than requested after a corruption fallback
+        self.last_restored_step: Optional[int] = None
         self._executor = (ThreadPoolExecutor(max_workers=1,
                                              thread_name_prefix="ckpt")
                           if async_save else None)
@@ -214,10 +242,13 @@ class CheckpointManager:
                                        for p in host}}
                 recon = host
                 self._last_full = step
+            manifest["checksums"] = {k: _crc(v) for k, v in payload.items()}
             self._base = recon
             self._base_step = step
             with self._lock:
                 np.savez(path + ".npz", **payload)
+                if self._chaos is not None:
+                    self._chaos.maybe_corrupt_checkpoint(path + ".npz")
                 with open(path + ".json", "w") as f:
                     json.dump(manifest, f, indent=1)
                 self._gc()
@@ -285,10 +316,36 @@ class CheckpointManager:
                 return list(reversed(chain))
             s = man["base_step"]
 
+    def _load_payload(self, man: Dict) -> Dict[str, np.ndarray]:
+        """Load one checkpoint's payload, verifying content checksums
+        (when the manifest has them — older checkpoints are trusted)."""
+        path = self._path(man["step"]) + ".npz"
+        checksums = man.get("checksums")
+        data: Dict[str, np.ndarray] = {}
+        try:
+            with np.load(path) as npz:
+                for k in npz.files:
+                    data[k] = npz[k]
+        except Exception as e:  # zip/zlib/ValueError: undecodable payload
+            raise CheckpointCorruptError(
+                f"checkpoint {man['step']}: unreadable payload "
+                f"{path!r}: {e!r}") from e
+        if checksums is not None:
+            if set(checksums) != set(data):
+                raise CheckpointCorruptError(
+                    f"checkpoint {man['step']}: payload keys do not match "
+                    f"manifest checksums")
+            for k, want in checksums.items():
+                if _crc(data[k]) != want:
+                    raise CheckpointCorruptError(
+                        f"checkpoint {man['step']}: checksum mismatch on "
+                        f"{k!r}")
+        return data
+
     def _reconstruct(self, step: int) -> Dict[str, np.ndarray]:
         leaves: Dict[str, np.ndarray] = {}
         for man in self._chain(step):
-            data = np.load(self._path(man["step"]) + ".npz")
+            data = self._load_payload(man)
             if man["kind"] == "full":
                 leaves = {p: data[f"full::{p}"] for p in man["leaves"]}
                 continue
@@ -306,14 +363,33 @@ class CheckpointManager:
         """Rebuild checkpoint ``step`` (default: latest) shaped like
         ``template``: same pytree structure; each leaf is cast to the
         template leaf's dtype and placed on its sharding (so a restore
-        onto a re-planned mesh reshards transparently)."""
+        onto a re-planned mesh reshards transparently).
+
+        Payload checksums are verified along the whole chain.  When the
+        requested checkpoint is corrupt (or its chain is broken), restore
+        falls back to the newest *earlier* step that reconstructs intact
+        — ``last_restored_step`` records the step actually loaded, so
+        resuming callers can replay from the right place."""
         self.wait()
         if step is None:
             step = self.latest_step()
             if step is None:
                 raise FileNotFoundError(
                     f"no checkpoints in {self.directory}")
-        leaves = self._reconstruct(step)
+        leaves = None
+        errors: List[str] = []
+        for s in [c for c in reversed(self.all_steps()) if c <= step]:
+            try:
+                leaves = self._reconstruct(s)
+            except (CheckpointCorruptError, FileNotFoundError) as e:
+                errors.append(str(e))
+                continue
+            self.last_restored_step = s
+            break
+        if leaves is None:
+            raise CheckpointCorruptError(
+                f"no intact checkpoint at or below step {step} in "
+                f"{self.directory}: " + "; ".join(errors))
         flat, tdef = jax.tree_util.tree_flatten_with_path(template)
         out = []
         for kp, tleaf in flat:

@@ -55,9 +55,14 @@ class FaultTolerantController:
 
     def __init__(self, n_hosts: int,
                  config: Optional[FaultToleranceConfig] = None,
-                 clock: Callable[[], float] = time.monotonic):
+                 clock: Callable[[], float] = time.monotonic,
+                 chaos=None):
         self.config = config or FaultToleranceConfig()
         self._clock = clock
+        self._chaos = None
+        if chaos is not None:
+            from repro.guard import as_monkey
+            self._chaos = as_monkey(chaos)
         now = clock()
         self._alive: Set[int] = set(range(n_hosts))
         self._last_seen: Dict[int, float] = {h: now for h in self._alive}
@@ -71,6 +76,10 @@ class FaultTolerantController:
         """Record one liveness report; beats from evicted hosts are
         ignored (re-admission is explicit via :meth:`rejoin`)."""
         if host not in self._alive:
+            return
+        if self._chaos is not None and self._chaos.should_kill_host(host):
+            # injected host death: swallow the beat so the timeout
+            # detector sees this host go silent
             return
         self._last_seen[host] = self._clock()
         self._step_time[host] = float(step_time)

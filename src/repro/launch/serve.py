@@ -27,6 +27,12 @@ def main():
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-seq", type=int, default=512)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--logit-view", action="store_true",
+                    help="attach a guarded incremental lm_head logit "
+                         "view, drive hot-swap deltas through it, and "
+                         "print per-view serving health")
+    ap.add_argument("--corpus", type=int, default=64,
+                    help="--logit-view corpus size (cached hidden rows)")
     args = ap.parse_args()
 
     if args.arch == "custom-10m":
@@ -38,9 +44,31 @@ def main():
         cfg = cfg.reduced() if args.reduced else cfg
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
+    degrade = None
+    if args.logit_view:
+        from repro.guard import DegradePolicy
+        degrade = DegradePolicy()
     eng = ServeEngine(model, params, batch_size=args.batch,
-                      max_seq=args.max_seq, temperature=args.temperature)
+                      max_seq=args.max_seq, temperature=args.temperature,
+                      degrade=degrade)
     rng = np.random.default_rng(0)
+    if args.logit_view:
+        # guarded corpus logit view over a synthetic cached-hidden corpus:
+        # hot-swap a burst of lm_head deltas, then report serving health
+        from repro.serve.incremental_views import IncrementalLogitView
+        d = cfg.d_model
+        hidden = rng.standard_normal((args.corpus, d)).astype(np.float32)
+        head = rng.standard_normal((cfg.vocab, d)).astype(np.float32) * 0.02
+        eng.attach_logit_view("lm_head",
+                              IncrementalLogitView(hidden, head))
+        for _ in range(8):
+            u = rng.standard_normal((cfg.vocab, 1)).astype(np.float32) * .01
+            v = rng.standard_normal((d, 1)).astype(np.float32) * .01
+            eng.hot_swap("lm_head", u, v)
+        eng.flush_views()
+        logits = eng.view_logits("lm_head")
+        print(f"[serve] logit view: {logits.shape} "
+              f"health={eng.view_health()['lm_head']}")
     prompts = rng.integers(1, cfg.vocab, size=(args.batch, args.prompt_len)
                            ).astype(np.int32)
     t0 = time.perf_counter()

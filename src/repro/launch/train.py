@@ -69,7 +69,8 @@ def train(cfg: ModelConfig, *, steps: int, batch: int, seq: int,
           save_every: int = 100, compression_rank: int = 0,
           mesh=None, log_every: int = 10, resume: bool = True,
           controller: Optional[FaultTolerantController] = None,
-          ft_config: Optional[FaultToleranceConfig] = None) -> Dict:
+          ft_config: Optional[FaultToleranceConfig] = None,
+          chaos=None) -> Dict:
     """Train ``cfg`` for ``steps`` steps under the fault-tolerance
     control plane: every step heartbeats the
     :class:`FaultTolerantController`, and the
@@ -80,8 +81,15 @@ def train(cfg: ModelConfig, *, steps: int, batch: int, seq: int,
 
     ``controller`` injects a pre-built controller (tests drive failures
     through it); by default one is built over ``jax.process_count()``
-    hosts with ``ft_config``.
+    hosts with ``ft_config``.  ``chaos`` (a
+    :class:`repro.guard.ChaosConfig` / ``ChaosMonkey``) threads fault
+    injection through the checkpoint manager (payload corruption) and
+    the controller (host kills) — the chaos-harness entry point for
+    end-to-end recovery drills.
     """
+    if chaos is not None:
+        from repro.guard import as_monkey
+        chaos = as_monkey(chaos)
     model = build_model(cfg)
     shape = ShapeConfig("train", seq, batch, "train")
     state = init_train_state(model, jax.random.PRNGKey(seed))
@@ -91,15 +99,18 @@ def train(cfg: ModelConfig, *, steps: int, batch: int, seq: int,
                               total_steps=steps, compression=comp)
     step_fn = jax.jit(step_fn, donate_argnums=(0,))
 
-    mgr = CheckpointManager(ckpt_dir, async_save=True) if ckpt_dir else None
+    mgr = (CheckpointManager(ckpt_dir, async_save=True, chaos=chaos)
+           if ckpt_dir else None)
     start = 0
     if mgr and resume and mgr.latest_step() is not None:
-        start = mgr.latest_step()
-        state = mgr.restore(state, step=start)
+        state = mgr.restore(state, step=mgr.latest_step())
+        # a checksum fallback may have loaded an earlier intact step;
+        # resume from what was actually restored, not what was asked for
+        start = mgr.last_restored_step
         print(f"[train] resumed from step {start}")
 
     ctl = controller or FaultTolerantController(
-        n_hosts=max(jax.process_count(), 1), config=ft_config)
+        n_hosts=max(jax.process_count(), 1), config=ft_config, chaos=chaos)
     supervisor = TrainingSupervisor(ctl, save_every=save_every if mgr else 0)
 
     # the supervisor owns the loop; the closures own the state
@@ -135,8 +146,18 @@ def train(cfg: ModelConfig, *, steps: int, batch: int, seq: int,
             # nothing to restore from: restart the run from scratch
             box["state"] = init_train_state(model, jax.random.PRNGKey(seed))
             return 0
-        s = mgr.latest_step()
-        box["state"] = mgr.restore(box["state"], step=s)
+        from repro.dist.checkpoint import CheckpointCorruptError
+        try:
+            box["state"] = mgr.restore(box["state"], step=mgr.latest_step())
+        except CheckpointCorruptError as e:
+            print(f"[train] every checkpoint corrupt ({e}); "
+                  f"restarting from scratch")
+            box["state"] = init_train_state(model, jax.random.PRNGKey(seed))
+            history[:] = []
+            return 0
+        # restore() falls back past corrupt checkpoints; replay from the
+        # step it actually loaded, not the newest one on disk
+        s = mgr.last_restored_step
         # drop log entries from steps the restart will replay, so
         # history/--out never carry duplicate step records
         history[:] = [h for h in history if h["step"] <= s]
@@ -185,6 +206,12 @@ def main():
                     help="evict hosts slower than this × median step time "
                          "(0 disables)")
     ap.add_argument("--min-hosts", type=int, default=1)
+    ap.add_argument("--chaos-seed", type=int, default=0)
+    ap.add_argument("--chaos-corrupt-ckpt-p", type=float, default=0.0,
+                    help="probability of corrupting each written "
+                         "checkpoint payload (recovery drill)")
+    ap.add_argument("--chaos-kill-host-p", type=float, default=0.0,
+                    help="per-heartbeat probability of killing a host")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
 
@@ -196,11 +223,17 @@ def main():
                               min_hosts=args.min_hosts)
     print(f"[train] {cfg.name}: {cfg.param_count()/1e6:.1f}M params, "
           f"{args.steps} steps, batch {args.batch}×{args.seq}")
+    chaos = None
+    if args.chaos_corrupt_ckpt_p > 0 or args.chaos_kill_host_p > 0:
+        from repro.guard import ChaosConfig
+        chaos = ChaosConfig(seed=args.chaos_seed,
+                            corrupt_checkpoint_p=args.chaos_corrupt_ckpt_p,
+                            kill_host_p=args.chaos_kill_host_p)
     result = train(cfg, steps=args.steps, batch=args.batch, seq=args.seq,
                    lr=args.lr, ckpt_dir=args.ckpt_dir,
                    save_every=args.save_every,
                    compression_rank=args.compression_rank, mesh=mesh,
-                   ft_config=ft)
+                   ft_config=ft, chaos=chaos)
     if args.out:
         with open(args.out, "w") as f:
             json.dump(result, f, indent=1)

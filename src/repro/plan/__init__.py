@@ -21,12 +21,12 @@ from .planner import (MaintenancePlan, ViewPlan, WorkloadDescriptor,
                       static_plan)
 from .trigger_cache import TriggerCache, global_trigger_cache, mesh_cache_key
 from .adaptive import AdaptivePlanner
-from .calibrate import calibrate_cost_scale
+from .calibrate import calibrate_cost_scale, calibrate_op_cost_scales
 
 __all__ = [
     "MaintenancePlan", "ViewPlan", "WorkloadDescriptor",
     "plan_for_engine", "plan_program", "program_fingerprint",
-    "static_plan", "calibrate_cost_scale",
+    "static_plan", "calibrate_cost_scale", "calibrate_op_cost_scales",
     "TriggerCache", "global_trigger_cache", "mesh_cache_key",
     "AdaptivePlanner",
 ]

@@ -43,7 +43,10 @@ class AdaptivePlanner:
         self._ranks: Deque[int] = deque(maxlen=history)
         self._batches: Deque[int] = deque(maxlen=history)
         self._since_replan = 0
+        self._force_replan = False
         self.replans = 0
+        #: per-view count of sentinel-reported drift recoveries
+        self.drift_counts: Dict[str, int] = {}
         self.plan: Optional[MaintenancePlan] = None
         self._compiled = None
         self._binding: Optional[Dict[str, int]] = None
@@ -107,20 +110,66 @@ class AdaptivePlanner:
         return replace(self.workload, update_rank=k, batch_size=t,
                        rank_lo=q(ranks, 0.1), rank_hi=q(ranks, 0.9))
 
+    # -- external signals (guard / stats) ------------------------------------
+    def note_drift(self, names) -> None:
+        """The drift sentinel re-evaluated ``names`` back to exactness:
+        their incremental maintenance is numerically too aggressive for
+        this workload.  Record it and force a re-plan at the next
+        firing (bypassing the drift-tolerance gate) so the pricing can
+        react — e.g. a refitted rank distribution tipping the repeat
+        offender to hybrid/re-evaluation."""
+        for n in names:
+            self.drift_counts[n] = self.drift_counts.get(n, 0) + 1
+        self._force_replan = True
+
+    def refit_from_stats(self, stats) -> Optional[float]:
+        """Refit ``cost_scale`` online from an engine's measured rates.
+
+        ``stats`` is an :class:`~repro.core.runtime.EngineStats` whose
+        timed counters pair wall-clock with the FLOPs they covered:
+        sweep seconds-per-FLOP over re-evaluation seconds-per-FLOP *is*
+        the workload's ``cost_scale`` (the calibration
+        :func:`repro.plan.calibrate_cost_scale` measures offline).
+        Needs both paths to have run with ``block=True`` at least once;
+        returns the fitted scale (or ``None`` when unmeasurable).  A
+        material change (> ``drift_tol`` relative) updates the workload
+        and forces a re-plan.
+        """
+        sweep_f = getattr(stats, "sweep_flops_timed", 0.0)
+        reeval_f = getattr(stats, "reeval_flops_timed", 0.0)
+        if (sweep_f <= 0 or reeval_f <= 0
+                or stats.trigger_seconds <= 0 or stats.reeval_seconds <= 0):
+            return None
+        sweep_rate = stats.trigger_seconds / sweep_f
+        reeval_rate = stats.reeval_seconds / reeval_f
+        scale = max(sweep_rate / reeval_rate, 1e-3)
+        old = self.workload.cost_scale
+        if abs(scale - old) > self.drift_tol * max(old, 1e-12):
+            self.workload = replace(self.workload, cost_scale=scale)
+            self._force_replan = True
+        return scale
+
     def maybe_replan(self) -> Optional[MaintenancePlan]:
         """Re-plan if due and drifted; returns the new plan only when a
-        per-view choice actually changed (else ``None``)."""
+        per-view choice actually changed (else ``None``).  A pending
+        :meth:`note_drift` / :meth:`refit_from_stats` signal forces the
+        re-plan regardless of cadence or rank drift."""
+        force, self._force_replan = self._force_replan, False
         if (not self.bound or self.plan is None
-                or self._since_replan < self.replan_every):
+                or (self._since_replan < self.replan_every and not force)):
+            self._force_replan = force  # keep the signal until due
             return None
         self._since_replan = 0
         fitted = self.observed_workload()
         if fitted is None:
-            return None
-        expected = self.workload.expected_rank()
-        if abs(fitted.expected_rank() - expected) <= \
-                self.drift_tol * max(expected, 1):
-            return None
+            if not force:
+                return None
+            fitted = self.workload
+        if not force:
+            expected = self.workload.expected_rank()
+            if abs(fitted.expected_rank() - expected) <= \
+                    self.drift_tol * max(expected, 1):
+                return None
         self.workload = fitted
         new = plan_program(self._compiled, fitted, binding=self._binding,
                            mesh=self._mesh, mesh_axis=self._mesh_axis)

@@ -114,3 +114,40 @@ def calibrate_cost_scale(make_engine, inputs: Dict, input_name: str, *,
     scale = ((times["incremental"] / flops["incremental"])
              / (times["reeval"] / flops["reeval"]))
     return max(float(scale), 1e-3)
+
+
+def calibrate_op_cost_scales(n: int = 512, samples: int = 5,
+                             seed: int = 0) -> Dict[str, float]:
+    """Measure ``WorkloadDescriptor.op_cost_scales`` on this backend.
+
+    Times one representative kernel per cost-model op kind at size
+    ``n`` — dense matmul (``"matmul"``), LU factorization+solve behind
+    ``Inverse`` (``"inverse"``), elementwise add (``"other"``) — and
+    returns each kind's measured seconds-per-FLOP relative to the
+    matmul rate.  A kind's scale > 1 means its FLOPs run slower than
+    the dense-matmul FLOPs the raw count implicitly assumes, pushing
+    the §7 crossover of views dominated by that kind upward.  Best-of-
+    ``samples`` timing, same rationale as :func:`calibrate_cost_scale`.
+    """
+    import jax.numpy as jnp
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.standard_normal((n, n)).astype(np.float32))
+    b = jnp.asarray(rng.standard_normal((n, n)).astype(np.float32))
+    spd = a @ a.T + n * jnp.eye(n, dtype=np.float32)  # safely invertible
+    ops = {
+        "matmul": (lambda: a @ b, 2.0 * n ** 3),
+        "inverse": (lambda: jnp.linalg.inv(spd),
+                    (2.0 / 3.0) * n ** 3 + 2.0 * n ** 2),
+        "other": (lambda: a + b, float(n) * n),
+    }
+    rates: Dict[str, float] = {}
+    for kind, (fn, op_flops) in ops.items():
+        jax.block_until_ready(fn())  # jit/BLAS warmup
+        best = float("inf")
+        for _ in range(samples):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn())
+            best = min(best, time.perf_counter() - t0)
+        rates[kind] = best / op_flops
+    base = rates["matmul"]
+    return {k: max(float(r / base), 1e-3) for k, r in rates.items()}

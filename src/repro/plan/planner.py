@@ -34,7 +34,7 @@ from typing import Dict, FrozenSet, List, Optional, Tuple
 from repro.core.codegen import trigger_touched_views
 from repro.core.compiler import CompiledProgram, compile_program
 from repro.core.cost import (batch_crossover_rank, batched_strategy,
-                             expr_cost, shape_of)
+                             expr_cost, expr_cost_kinds, shape_of)
 from repro.core.program import Program
 
 STRATEGIES = ("incremental", "reeval", "hybrid")
@@ -65,6 +65,16 @@ class WorkloadDescriptor:
     made of — >10x on CPU BLAS — so the *effective* §7 crossover sits
     at ``K*/cost_scale``.  Measure it with
     :func:`repro.plan.calibrate_cost_scale`.
+
+    ``op_cost_scales`` refines the *re-evaluation* side per op kind
+    (keys ``"matmul"`` / ``"inverse"`` / ``"other"``, values =
+    wall-clock per FLOP relative to a dense matmul FLOP; missing kinds
+    default to 1.0).  An OLS view whose re-evaluation is mostly an n×n
+    ``Inverse`` runs those FLOPs several× slower than the matmul rate
+    the plain count assumes, so its true crossover sits above the
+    unscaled ``K*`` — exactly the cells straddling the §7 boundary that
+    a single global scale misplans.  Measure with
+    :func:`repro.plan.calibrate_op_cost_scales`.
     """
 
     update_rank: int = 1          # per-update factored rank k
@@ -74,8 +84,16 @@ class WorkloadDescriptor:
     reads_per_firing: float = 1.0
     cost_scale: float = 1.0       # wall-clock per-FLOP cost of the sweep
     #                               relative to re-evaluation (calibrated)
+    op_cost_scales: Optional[Dict[str, float]] = None
     mesh_shape: Optional[Tuple[int, ...]] = None
     mesh_axes: Optional[Tuple[str, ...]] = None
+
+    def effective_reeval_flops(self, kinds: Dict[str, float]) -> float:
+        """Σ kind_flops × kind_scale — FLOPs in matmul-equivalents."""
+        if not self.op_cost_scales:
+            return sum(kinds.values())
+        return sum(f * self.op_cost_scales.get(k, 1.0)
+                   for k, f in kinds.items())
 
     def expected_rank(self) -> int:
         return max(1, int(self.update_rank) * int(self.batch_size))
@@ -268,7 +286,11 @@ def plan_program(compiled, workload: WorkloadDescriptor, *,
         name = st.target.name
         shape = shape_of(st.target, binding)
         reeval = expr_cost(st.expr, binding).flops
-        kstar = batch_crossover_rank(shape, reeval)
+        # per-op-kind scaling: crossover priced in matmul-equivalent
+        # FLOPs, so inverse-heavy views (OLS) land on the right side
+        reeval_eff = workload.effective_reeval_flops(
+            expr_cost_kinds(st.expr, binding))
+        kstar = batch_crossover_rank(shape, reeval_eff)
         k_eff = max(1, int(kstar / max(workload.cost_scale, 1e-12)))
         if hi < k_eff:
             strat, thr = "incremental", None
@@ -281,7 +303,7 @@ def plan_program(compiled, workload: WorkloadDescriptor, *,
             n, m = shape
             k = workload.expected_rank()
             maintain = 2.0 * k * n * m                 # per-firing sweep
-            on_demand = workload.reads_per_firing * reeval
+            on_demand = workload.reads_per_firing * reeval_eff
             materialize = maintain <= on_demand
         views[name] = ViewPlan(view=name, strategy=strat,
                                threshold_rank=thr, materialize=materialize,

@@ -28,7 +28,11 @@ class ServeEngine:
     max_seq: int = 2048
     temperature: float = 0.0
     seed: int = 0
+    #: optional :class:`repro.guard.DegradePolicy` — wraps every attached
+    #: logit view in retry + circuit-breaker + last-good-snapshot serving
+    degrade: Optional[Any] = None
     _logit_views: Dict[str, Any] = field(default_factory=dict, init=False)
+    _view_guards: Dict[str, Any] = field(default_factory=dict, init=False)
 
     def __post_init__(self):
         cfg = self.model.cfg
@@ -89,6 +93,9 @@ class ServeEngine:
                 f"{weight_path!r} is behind a nonlinearity; its cached "
                 f"views cannot be maintained exactly — re-encode instead")
         self._logit_views[weight_path] = view
+        if self.degrade is not None:
+            from repro.guard import GuardedView
+            self._view_guards[weight_path] = GuardedView(view, self.degrade)
 
     def hot_swap(self, weight_path: str, u: jax.Array, v: jax.Array) -> bool:
         """Route a low-rank weight delta ``W += u vᵀ`` to the *cached corpus
@@ -107,13 +114,45 @@ class ServeEngine:
         if weight_path not in self._logit_views:
             raise KeyError(f"no logit view attached for {weight_path!r}; "
                            f"have {sorted(self._logit_views)}")
+        guard = self._view_guards.get(weight_path)
+        if guard is not None:
+            # retried + breaker-gated: a repeatedly failing refresh trips
+            # the breaker and the view degrades to its last-good snapshot
+            return guard.submit(u, v)
         return self._logit_views[weight_path].submit_head_update(u, v)
 
     def flush_views(self) -> None:
         """Force all pending hot-swap deltas into the maintained views —
-        call before serving reads that need exact logits."""
-        for view in self._logit_views.values():
-            view.flush()
+        call before serving reads that need exact logits.  Guarded views
+        retry with backoff; a view whose breaker is open stays on its
+        snapshot (see :meth:`view_health`) instead of raising."""
+        for path, view in self._logit_views.items():
+            guard = self._view_guards.get(path)
+            if guard is not None:
+                guard.flush()
+            else:
+                view.flush()
+
+    def view_logits(self, weight_path: str):
+        """Read one view's logits at bounded staleness: fresh when
+        healthy, the last-good snapshot when degraded (unguarded views
+        read straight through)."""
+        guard = self._view_guards.get(weight_path)
+        if guard is not None:
+            return guard.read()
+        return self._logit_views[weight_path].logits
+
+    def view_health(self) -> Dict[str, Dict[str, Any]]:
+        """Per-view serving health: breaker state, staleness bound,
+        retry/degradation counters (``{"serving": "fresh"}`` for
+        unguarded views)."""
+        out: Dict[str, Dict[str, Any]] = {}
+        for path in self._logit_views:
+            guard = self._view_guards.get(path)
+            out[path] = (guard.health() if guard is not None
+                         else {"breaker": None, "serving": "fresh",
+                               "staleness_s": 0.0})
+        return out
 
     def replan_views(self, workload) -> Dict[str, Any]:
         """Hot-swap a cost-based maintenance re-plan into every attached
@@ -156,6 +195,7 @@ class ServeEngine:
         self.cache = self.model.init_cache(self.batch_size, self.max_seq)
         self._pos = 0
         self._logit_views.clear()
+        self._view_guards.clear()
         return self
 
     def generate(self, prompts: np.ndarray, max_new: int = 32,
