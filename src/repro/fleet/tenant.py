@@ -1,0 +1,287 @@
+"""Tenants: one program + engine + SLO per customer, plus the update
+log that makes worker crashes survivable.
+
+A tenant owns everything the fleet must never mix across customers: an
+:class:`~repro.core.runtime.IncrementalEngine` (guarded, wired to the
+fleet's shared :class:`~repro.plan.TriggerCache`), a durable-ordered
+:class:`UpdateLog` of admitted updates, the **committed view store**
+reads are served from, and a per-tenant
+:class:`~repro.guard.CircuitBreaker` for noisy-neighbor quarantine.
+
+The split between ``engine.views`` (working state, mutated mid-claim)
+and ``committed_views`` (a pointer snapshot advanced only at commit) is
+what gives readers isolation for free: jax arrays are immutable, so a
+reader holding the committed dict sees a consistent pre-claim store no
+matter what a worker is doing to the engine concurrently.
+
+Exactly-once accounting lives in three fields: ``applied_lsn`` (the
+log prefix reflected in ``committed_views``), ``inflight`` (the claim
+currently trying to advance it, with its pre-firing snapshot), and
+``commit_log`` (the sequence of committed firing groups — the replay
+script the bit-identical property test checks against).
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.runtime import IncrementalEngine
+from repro.guard import CircuitBreaker, GuardConfig
+from repro.guard.txn import FiringSnapshot
+from repro.plan import TriggerCache
+
+
+@dataclass
+class TenantSpec:
+    """Static per-tenant contract: program, SLO, quotas, containment."""
+
+    tenant_id: str
+    program: object                 # repro.core.ir.Program
+    update_ranks: Optional[Dict[str, int]] = None
+    slo_s: float = 1.0              # staleness SLO (dirty → refreshed)
+    priority: float = 1.0           # scheduler weight (higher = sooner)
+    sheddable: bool = True          # may the shedding tier drop it?
+    quota_rate: float = float("inf")  # admitted updates/second
+    quota_burst: int = 64
+    queue_capacity: int = 256       # max pending (unapplied) log entries
+    max_claim_rank: int = 64        # stacked rank one claim fires at most
+    guarded: bool = True            # wrap the engine in repro.guard
+    chaos: Optional[object] = None  # ChaosConfig/ChaosMonkey for the engine
+    breaker_threshold: int = 3      # aborted claims → quarantined
+    breaker_reset_s: float = 5.0
+    engine_opts: Dict[str, object] = field(default_factory=dict)
+
+
+@dataclass
+class LogEntry:
+    """One admitted update, totally ordered by per-tenant LSN."""
+
+    lsn: int
+    input_name: str
+    u: np.ndarray
+    v: np.ndarray
+    submitted_at: float
+
+
+class UpdateLog:
+    """Append-only per-tenant update log (thread-safe).
+
+    The log *is* the recovery story: a worker's uncommitted firing dies
+    with its lease, and the reclaimer replays the same entries —
+    ``pending(applied_lsn)`` — against the rolled-back store.  Entries
+    are pruned only once a commit advances ``applied_lsn`` past them.
+    """
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._entries: List[LogEntry] = []
+        self._next_lsn = 1
+        self.appended = 0
+        self.pruned = 0
+
+    def append(self, input_name: str, u: np.ndarray, v: np.ndarray,
+               now: float) -> LogEntry:
+        with self._lock:
+            entry = LogEntry(self._next_lsn, input_name,
+                             np.asarray(u, dtype=np.float32),
+                             np.asarray(v, dtype=np.float32), now)
+            self._next_lsn += 1
+            self._entries.append(entry)
+            self.appended += 1
+            return entry
+
+    def _first_pending(self, applied_lsn: int) -> int:
+        """Index of the first entry with ``lsn > applied_lsn`` (lock
+        held).  LSNs are consecutive and prune only drops a prefix, so
+        this is index arithmetic, not a scan — ``pending_count`` sits on
+        every admission decision and fleet load() probe."""
+        if not self._entries:
+            return 0
+        return min(len(self._entries),
+                   max(0, applied_lsn - self._entries[0].lsn + 1))
+
+    def pending(self, applied_lsn: int) -> List[LogEntry]:
+        """Entries not yet reflected in the committed store, in LSN
+        order."""
+        with self._lock:
+            return self._entries[self._first_pending(applied_lsn):]
+
+    def pending_count(self, applied_lsn: int) -> int:
+        with self._lock:
+            return len(self._entries) - self._first_pending(applied_lsn)
+
+    def last_lsn(self) -> int:
+        with self._lock:
+            return self._next_lsn - 1
+
+    def oldest_pending_at(self, applied_lsn: int) -> Optional[float]:
+        with self._lock:
+            i = self._first_pending(applied_lsn)
+            return self._entries[i].submitted_at \
+                if i < len(self._entries) else None
+
+    def prune(self, upto_lsn: int) -> int:
+        """Drop entries with ``lsn <= upto_lsn`` (they are committed)."""
+        with self._lock:
+            keep = [e for e in self._entries if e.lsn > upto_lsn]
+            n = len(self._entries) - len(keep)
+            self._entries = keep
+            self.pruned += n
+            return n
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._entries)
+
+
+@dataclass
+class Inflight:
+    """The claim currently mutating a tenant's engine: its fencing
+    token, the log prefix it is trying to commit, and the pre-firing
+    snapshot a reclaimer restores if the holder dies."""
+
+    token: int
+    target_lsn: int
+    snapshot: FiringSnapshot
+
+
+@dataclass
+class TenantStats:
+    submitted: int = 0
+    decisions: Dict[str, int] = field(default_factory=dict)
+    commits: int = 0
+    committed_updates: int = 0
+    replays: int = 0            # claims that rolled back a dead worker
+    fenced_aborts: int = 0      # own commit rejected by fencing check
+    aborted_claims: int = 0     # guard aborted every firing in a claim
+    reads: int = 0
+    dirty_reads: int = 0        # reads served while pending work existed
+    reeval_on_read: int = 0     # cold-tier degraded refreshes
+
+    def count(self, decision: str) -> None:
+        self.decisions[decision] = self.decisions.get(decision, 0) + 1
+
+
+class Tenant:
+    """Runtime state for one tenant (see module docstring)."""
+
+    def __init__(self, spec: TenantSpec, trigger_cache: TriggerCache,
+                 clock=time.monotonic):
+        self.spec = spec
+        self._clock = clock
+        opts = dict(spec.engine_opts)
+        opts.setdefault("guard", GuardConfig() if spec.guarded else None)
+        opts.setdefault("chaos", spec.chaos)
+        self.engine = IncrementalEngine(
+            spec.program, spec.update_ranks,
+            trigger_cache=trigger_cache, **opts)
+        self.log = UpdateLog()
+        self.applied_lsn = 0
+        self.committed_views: Dict[str, object] = {}
+        self.inflight: Optional[Inflight] = None
+        self.breaker = CircuitBreaker(spec.breaker_threshold,
+                                      spec.breaker_reset_s, clock=clock)
+        self.mutex = threading.RLock()   # serializes engine access
+        self.stats = TenantStats()
+        self.mode = "incremental"        # or "reeval_on_read" (cold tier)
+        self.last_read_at = clock()      # cold-tenant detection (overload)
+        #: committed firing groups, in commit order:
+        #: (input_name, (lsn, …)) per group — the replay script for the
+        #: bit-identical N-isolated-engines property test
+        self.commit_log: List[Tuple[str, Tuple[int, ...]]] = []
+
+    def initialize(self, inputs: Dict[str, object]) -> None:
+        with self.mutex:
+            self.engine.initialize(inputs)
+            self.committed_views = dict(self.engine.views)
+
+    # -- dirtiness / staleness ----------------------------------------------
+    def dirty(self) -> bool:
+        return self.log.last_lsn() > self.applied_lsn
+
+    def staleness(self) -> float:
+        """Seconds the oldest unapplied update has been waiting (0.0
+        when clean) — the quantity the SLO bounds."""
+        oldest = self.log.oldest_pending_at(self.applied_lsn)
+        return 0.0 if oldest is None else max(0.0, self._clock() - oldest)
+
+    def slo_pressure(self) -> float:
+        """staleness / SLO — ≥ 1.0 means the SLO is already violated."""
+        return self.staleness() / max(self.spec.slo_s, 1e-9)
+
+    # -- health --------------------------------------------------------------
+    def health(self) -> Dict[str, object]:
+        guard = self.engine.guard
+        return {
+            "tenant": self.spec.tenant_id,
+            "mode": self.mode,
+            "breaker": self.breaker.state,
+            "dirty": self.dirty(),
+            "pending": self.log.pending_count(self.applied_lsn),
+            "applied_lsn": self.applied_lsn,
+            "staleness_s": self.staleness(),
+            "slo_s": self.spec.slo_s,
+            "commits": self.stats.commits,
+            "replays": self.stats.replays,
+            "quarantined": (len(guard.quarantine) if guard is not None
+                            else 0),
+        }
+
+
+class TenantRegistry:
+    """All tenants of one fleet + the shared compiled-trigger cache.
+
+    The cache is THE cross-tenant fast path: same-program tenants key
+    to identical (fingerprint, backend, tail) entries, so the second
+    tenant's triggers come back pre-jitted (benchmarks/bench_fleet.py
+    measures the aggregate win).
+    """
+
+    def __init__(self, trigger_cache: Optional[TriggerCache] = None,
+                 clock=time.monotonic):
+        self.trigger_cache = (trigger_cache if trigger_cache is not None
+                              else TriggerCache())
+        self._clock = clock
+        self._tenants: Dict[str, Tenant] = {}
+        self._lock = threading.Lock()
+
+    def register(self, spec: TenantSpec,
+                 inputs: Dict[str, object]) -> Tenant:
+        with self._lock:
+            if spec.tenant_id in self._tenants:
+                raise ValueError(f"tenant {spec.tenant_id!r} already "
+                                 f"registered")
+        tenant = Tenant(spec, self.trigger_cache, clock=self._clock)
+        tenant.initialize(inputs)
+        with self._lock:
+            self._tenants[spec.tenant_id] = tenant
+        return tenant
+
+    def unregister(self, tenant_id: str) -> Optional[Tenant]:
+        with self._lock:
+            return self._tenants.pop(tenant_id, None)
+
+    def get(self, tenant_id: str) -> Tenant:
+        with self._lock:
+            try:
+                return self._tenants[tenant_id]
+            except KeyError:
+                raise KeyError(f"unknown tenant {tenant_id!r}; have "
+                               f"{sorted(self._tenants)}") from None
+
+    def __iter__(self):
+        with self._lock:
+            return iter(list(self._tenants.values()))
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._tenants)
+
+    def ids(self) -> List[str]:
+        with self._lock:
+            return sorted(self._tenants)

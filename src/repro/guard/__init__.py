@@ -213,55 +213,66 @@ class EngineGuard:
         key = (input_name, bucket, screened)
         hit = self._fused.get(key)
         if hit is None:
-            import jax
-            import jax.numpy as jnp
-            from repro.core.codegen import trigger_touched_views
-            inner = engine._batched_trigger_fn(input_name, bucket)
-            written, read_only = trigger_touched_views(
-                engine._bucket_trigger(input_name, bucket))
             # host-screened factors (batch admission) skip the
             # in-program screen: one fewer full pass over (u, v)
             screen_inputs = (self.config.validation.check_finite
                              and not screened)
-
-            # flat tuples across the jit boundary (the dict-pytree
-            # round-trip costs tens of µs per dispatch — same reason
-            # build_trigger_fn stages its core this way).  No per-firing
-            # flag output either: the threaded [input-rejects,
-            # output-aborts] counter both reports aggregate health
-            # (sync's single fetch) and, via its per-firing snapshots,
-            # identifies WHICH firing failed in the rare abort walk.
-            def core(wvals, rvals, u, v, nbad):
-                views = dict(zip(written, wvals))
-                views.update(zip(read_only, rvals))
-                out = inner(views, u, v)
-                ok_out = jnp.stack([jnp.isfinite(out[n]).all()
-                                    for n in written]).all()
-                if screen_inputs:  # the admission screen, deferred here
-                    ok_in = jnp.isfinite(u).all() & jnp.isfinite(v).all()
-                else:
-                    ok_in = jnp.bool_(True)
-                ok = ok_in & ok_out
-                # select-commit: elementwise where fuses into the
-                # trigger's own update loops (lax.cond was measured
-                # far slower here — its branch outputs are copied)
-                new = tuple(jnp.where(ok, out[n], w)
-                            for n, w in zip(written, wvals))
-                bad = jnp.stack([~ok_in, ok_in & ~ok_out])
-                return new, nbad + bad.astype(jnp.int32)
-
-            core = jax.jit(core)
-
-            def fused(views, u, v, nbad):
-                new, nbad = core(tuple(views[n] for n in written),
-                                 tuple(views[n] for n in read_only),
-                                 u, v, nbad)
-                views.update(zip(written, new))
-                return views, nbad
-
-            hit = (fused, written)
+            # the fused program is pure w.r.t. the views passed in —
+            # engine-local state never enters the closure — so it is
+            # shared through the engine's trigger cache: same-program
+            # tenants in a fleet pay its trace/compile once
+            hit = engine._cached_build(
+                ("fused", input_name, bucket, screened, screen_inputs),
+                lambda: self._build_fused(engine, input_name, bucket,
+                                          screen_inputs))
             self._fused[key] = hit
         return hit
+
+    def _build_fused(self, engine, input_name: str, bucket: int,
+                     screen_inputs: bool):
+        import jax
+        import jax.numpy as jnp
+        from repro.core.codegen import trigger_touched_views
+        inner = engine._batched_trigger_fn(input_name, bucket)
+        written, read_only = trigger_touched_views(
+            engine._bucket_trigger(input_name, bucket))
+
+        # flat tuples across the jit boundary (the dict-pytree
+        # round-trip costs tens of µs per dispatch — same reason
+        # build_trigger_fn stages its core this way).  No per-firing
+        # flag output either: the threaded [input-rejects,
+        # output-aborts] counter both reports aggregate health
+        # (sync's single fetch) and, via its per-firing snapshots,
+        # identifies WHICH firing failed in the rare abort walk.
+        def core(wvals, rvals, u, v, nbad):
+            views = dict(zip(written, wvals))
+            views.update(zip(read_only, rvals))
+            out = inner(views, u, v)
+            ok_out = jnp.stack([jnp.isfinite(out[n]).all()
+                                for n in written]).all()
+            if screen_inputs:  # the admission screen, deferred here
+                ok_in = jnp.isfinite(u).all() & jnp.isfinite(v).all()
+            else:
+                ok_in = jnp.bool_(True)
+            ok = ok_in & ok_out
+            # select-commit: elementwise where fuses into the
+            # trigger's own update loops (lax.cond was measured
+            # far slower here — its branch outputs are copied)
+            new = tuple(jnp.where(ok, out[n], w)
+                        for n, w in zip(written, wvals))
+            bad = jnp.stack([~ok_in, ok_in & ~ok_out])
+            return new, nbad + bad.astype(jnp.int32)
+
+        core = jax.jit(core)
+
+        def fused(views, u, v, nbad):
+            new, nbad = core(tuple(views[n] for n in written),
+                             tuple(views[n] for n in read_only),
+                             u, v, nbad)
+            views.update(zip(written, new))
+            return views, nbad
+
+        return (fused, written)
 
     def fire(self, engine, input_name: str, bucket: int, P, Q,
              screened: bool = False) -> None:

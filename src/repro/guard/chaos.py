@@ -17,7 +17,16 @@ code paths:
     checksum verification and chain fallback must catch it);
   * ``kill_host_p``    — permanently swallow a host's heartbeats
     (:class:`~repro.dist.fault_tolerance.FaultTolerantController`'s
-    timeout eviction and the supervisor restart loop must recover).
+    timeout eviction and the supervisor restart loop must recover);
+  * ``worker_crash_p`` — kill a fleet refresh worker *between* firing
+    and commit (:mod:`repro.fleet`'s lease reclaim must roll back the
+    uncommitted work and replay it from the tenant's update log);
+  * ``lease_expiry_p`` — force-expire a worker's lease mid-claim (its
+    commit must be fenced off and its work rolled back — the
+    slow-worker-loses-the-race case, compressed);
+  * ``slow_worker_p``  — stall a worker for ``slow_worker_s`` seconds
+    inside its claim, so its lease expires *naturally* and reclaim +
+    fencing race a still-running worker.
 
 Every decision comes from one ``np.random.default_rng(seed)`` drawn in
 call order, so a failing chaos run replays exactly under the same seed.
@@ -46,6 +55,10 @@ class ChaosConfig:
     trigger_raise_p: float = 0.0
     corrupt_checkpoint_p: float = 0.0
     kill_host_p: float = 0.0
+    worker_crash_p: float = 0.0       # fleet: die after firing, pre-commit
+    lease_expiry_p: float = 0.0       # fleet: lease yanked mid-claim
+    slow_worker_p: float = 0.0        # fleet: stall inside a claim …
+    slow_worker_s: float = 0.0        # … for this many (injected) seconds
 
     def monkey(self) -> "ChaosMonkey":
         return ChaosMonkey(self)
@@ -63,6 +76,9 @@ class ChaosMonkey:
         self.raises = 0
         self.corruptions = 0
         self.kills = 0
+        self.worker_crashes = 0
+        self.lease_expiries = 0
+        self.slowdowns = 0
 
     # -- update poisoning ----------------------------------------------------
     def poison_update(self, u, v) -> Tuple[np.ndarray, np.ndarray]:
@@ -135,6 +151,40 @@ class ChaosMonkey:
 
     def killed_hosts(self) -> Set[int]:
         return set(self._killed)
+
+    # -- fleet worker faults (repro.fleet) -----------------------------------
+    def should_crash_worker(self) -> bool:
+        """Crash this worker NOW — after it fired but before it commits.
+
+        The scheduler abandons the claim without releasing the lease
+        (exactly what a dead process looks like to the lease store); the
+        TTL expires, another worker reclaims, rolls the uncommitted
+        firing back, and replays from the tenant's update log."""
+        cfg = self.config
+        if cfg.worker_crash_p > 0 and self._rng.random() < cfg.worker_crash_p:
+            self.worker_crashes += 1
+            return True
+        return False
+
+    def should_expire_lease(self) -> bool:
+        """Yank the current claim's lease before its commit, so the
+        commit hits the fencing check and the work is rolled back — the
+        deterministic compression of a worker losing a TTL race."""
+        cfg = self.config
+        if cfg.lease_expiry_p > 0 and self._rng.random() < cfg.lease_expiry_p:
+            self.lease_expiries += 1
+            return True
+        return False
+
+    def slow_worker_delay(self) -> float:
+        """Seconds to stall inside the claim (0.0 = healthy).  Injected
+        through the scheduler's clock/sleep, so with a fake clock the
+        stall is virtual but still long enough to expire the lease."""
+        cfg = self.config
+        if cfg.slow_worker_p > 0 and self._rng.random() < cfg.slow_worker_p:
+            self.slowdowns += 1
+            return float(cfg.slow_worker_s)
+        return 0.0
 
 
 def as_monkey(chaos: Optional[object]) -> Optional[ChaosMonkey]:

@@ -31,6 +31,17 @@ class DegradePolicy:
     backoff_base: float = 0.01    # first retry delay, seconds
     backoff_max: float = 1.0      # delay cap
     jitter: float = 0.5           # ± fraction of the delay randomized
+    #: AWS-style "full jitter": each sleep is uniform(0, delay) instead
+    #: of delay·(1 ± jitter).  A fleet of workers retrying the same
+    #: failure decorrelates completely — reclaim storms cannot
+    #: synchronize into periodic thundering herds (the ±-fraction mode
+    #: keeps them within ``jitter`` of lock-step).
+    full_jitter: bool = False
+    #: total wall-clock budget for one retried call, seconds (None =
+    #: attempts-bounded only).  Enforced against the injected ``clock``,
+    #: so a lease-holding fleet worker can bound its retry loop well
+    #: under the lease TTL instead of retrying into a fencing conflict.
+    retry_deadline: Optional[float] = None
     breaker_threshold: int = 3    # consecutive exhausted refreshes → open
     breaker_reset: float = 30.0   # seconds open → half-open probe
     seed: int = 0
@@ -47,6 +58,7 @@ class CircuitBreaker:
         self._clock = clock
         self._failures = 0
         self._opened_at: Optional[float] = None
+        self._probe_started: Optional[float] = None
 
     @property
     def state(self) -> str:
@@ -61,26 +73,50 @@ class CircuitBreaker:
         return self._failures
 
     def allow(self) -> bool:
-        """May a refresh be attempted now?  half_open admits exactly one
-        probe (a failed probe re-opens the window from now)."""
-        return self.state != "open"
+        """May a refresh be attempted now?  half_open admits exactly ONE
+        in-flight probe — concurrent callers (a fleet of workers all
+        watching the same broken tenant) see the window as still open
+        instead of stampeding the backend together.  A probe whose
+        caller vanished (crashed worker) is abandoned after another
+        ``reset_timeout``, re-arming the window."""
+        if self.state != "half_open":
+            return self.state == "closed"
+        now = self._clock()
+        if (self._probe_started is not None
+                and now - self._probe_started < self.reset_timeout):
+            return False  # someone else's probe is in flight
+        self._probe_started = now
+        return True
 
     def record_success(self) -> None:
         self._failures = 0
         self._opened_at = None
+        self._probe_started = None
 
     def record_failure(self) -> None:
         self._failures += 1
+        self._probe_started = None
         if self._failures >= self.threshold or self._opened_at is not None:
             self._opened_at = self._clock()
 
 
 def retry_with_backoff(fn: Callable[[], object], policy: DegradePolicy,
                        rng: np.random.Generator,
-                       sleep: Callable[[float], None] = time.sleep):
+                       sleep: Callable[[float], None] = time.sleep,
+                       clock: Callable[[], float] = time.monotonic):
     """Call ``fn`` up to ``1 + max_retries`` times with exponential
     backoff + jitter between attempts.  Returns ``(value, attempts)``;
-    re-raises the last exception when every attempt failed."""
+    re-raises the last exception when every attempt failed.
+
+    The injected ``clock``/``sleep`` pair makes the loop fully
+    deterministic under a fake clock (fleet tests, chaos runs).  With
+    ``policy.retry_deadline`` set, the loop also gives up once the next
+    sleep would land past the deadline — a lease-holding worker must
+    fail fast and let the claim be reclaimed, not retry through its own
+    TTL.  ``policy.full_jitter`` draws each sleep uniform(0, delay)
+    (decorrelated) instead of delay·(1 ± jitter).
+    """
+    t0 = clock()
     delay = policy.backoff_base
     last: Optional[BaseException] = None
     for attempt in range(1 + policy.max_retries):
@@ -90,8 +126,15 @@ def retry_with_backoff(fn: Callable[[], object], policy: DegradePolicy,
             last = e
             if attempt == policy.max_retries:
                 break
-            jit = 1.0 + policy.jitter * (2.0 * rng.random() - 1.0)
-            sleep(min(delay * jit, policy.backoff_max))
+            if policy.full_jitter:
+                pause = min(delay, policy.backoff_max) * rng.random()
+            else:
+                jit = 1.0 + policy.jitter * (2.0 * rng.random() - 1.0)
+                pause = min(delay * jit, policy.backoff_max)
+            if (policy.retry_deadline is not None
+                    and clock() - t0 + pause > policy.retry_deadline):
+                break
+            sleep(pause)
             delay = min(delay * 2.0, policy.backoff_max)
     raise last  # type: ignore[misc]
 
@@ -136,7 +179,8 @@ class GuardedView:
             return False
         try:
             _, attempts = retry_with_backoff(fn, self.policy, self._rng,
-                                             sleep=self._sleep)
+                                             sleep=self._sleep,
+                                             clock=self._clock)
         except Exception as e:  # noqa: BLE001
             self.refresh_failures += 1
             self.last_error = repr(e)

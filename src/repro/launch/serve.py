@@ -33,6 +33,12 @@ def main():
                          "print per-view serving health")
     ap.add_argument("--corpus", type=int, default=64,
                     help="--logit-view corpus size (cached hidden rows)")
+    ap.add_argument("--fleet", type=int, default=0, metavar="N",
+                    help="serve N fleet tenants (one logit view each) "
+                         "through repro.fleet: lease-claimed refresh "
+                         "workers, admission control, shared trigger "
+                         "cache; prints fleet health + stats")
+    ap.add_argument("--fleet-workers", type=int, default=2)
     args = ap.parse_args()
 
     if args.arch == "custom-10m":
@@ -69,6 +75,44 @@ def main():
         logits = eng.view_logits("lm_head")
         print(f"[serve] logit view: {logits.shape} "
               f"health={eng.view_health()['lm_head']}")
+    if args.fleet > 0:
+        # multi-tenant serving: N tenants, each its own corpus logit
+        # view, refreshed by a shared lease-coordinated worker pool.
+        # Same-shape tenants share compiled triggers (fleet cache).
+        from repro.fleet import FleetConfig, FleetScheduler, TenantSpec
+        from repro.serve.incremental_views import build_logit_view_program
+        d, p = cfg.d_model, cfg.vocab
+        fleet = FleetScheduler(FleetConfig(lease_ttl=0.5,
+                                           workers=args.fleet_workers))
+        tenant_of = {}
+        for i in range(args.fleet):
+            tid = f"tenant-{i}"
+            prog = build_logit_view_program(args.corpus, d, p)
+            inputs = {
+                "H": rng.standard_normal((args.corpus, d)
+                                         ).astype(np.float32),
+                "W": rng.standard_normal((p, d)).astype(np.float32) * .02,
+            }
+            fleet.add_tenant(TenantSpec(tid, prog, {"W": 1}, slo_s=0.25,
+                                        quota_rate=200.0, quota_burst=32),
+                             inputs)
+            tenant_of[f"lm_head.{i}"] = tid
+        eng.attach_fleet(fleet, tenant_of)
+        fleet.start()
+        try:
+            for _ in range(8):
+                for path in tenant_of:
+                    u = rng.standard_normal((p, 1)).astype(np.float32) * .01
+                    v = rng.standard_normal((d, 1)).astype(np.float32) * .01
+                    eng.hot_swap(path, u, v)
+            eng.flush_views()
+            for path in tenant_of:
+                logits = eng.view_logits(path)
+                print(f"[serve] fleet view {path}: {logits.shape} "
+                      f"health={eng.view_health()[path]}")
+            print(f"[serve] fleet stats: {fleet.fleet_stats()}")
+        finally:
+            fleet.stop()
     prompts = rng.integers(1, cfg.vocab, size=(args.batch, args.prompt_len)
                            ).astype(np.int32)
     t0 = time.perf_counter()

@@ -17,8 +17,8 @@ across engine instances.  See docs/planner.md.
 """
 
 from .planner import (MaintenancePlan, ViewPlan, WorkloadDescriptor,
-                      plan_for_engine, plan_program, program_fingerprint,
-                      static_plan)
+                      firing_cost_flops, plan_for_engine, plan_program,
+                      program_fingerprint, static_plan, trigger_chain_costs)
 from .trigger_cache import TriggerCache, global_trigger_cache, mesh_cache_key
 from .adaptive import AdaptivePlanner
 from .calibrate import calibrate_cost_scale, calibrate_op_cost_scales
@@ -26,7 +26,8 @@ from .calibrate import calibrate_cost_scale, calibrate_op_cost_scales
 __all__ = [
     "MaintenancePlan", "ViewPlan", "WorkloadDescriptor",
     "plan_for_engine", "plan_program", "program_fingerprint",
-    "static_plan", "calibrate_cost_scale", "calibrate_op_cost_scales",
+    "static_plan", "firing_cost_flops", "trigger_chain_costs",
+    "calibrate_cost_scale", "calibrate_op_cost_scales",
     "TriggerCache", "global_trigger_cache", "mesh_cache_key",
     "AdaptivePlanner",
 ]

@@ -66,6 +66,17 @@ class WorkloadDescriptor:
     at ``K*/cost_scale``.  Measure it with
     :func:`repro.plan.calibrate_cost_scale`.
 
+    ``chain_aware`` additionally prices the trigger's shared delta
+    chain into each view's sweep cost.  The assigns of one trigger
+    (``ΔZ``-style intermediate factors) are computed once per firing and
+    amortize across every view maintained incrementally — but when
+    siblings cross to re-evaluation, a *lone* incremental view keeps
+    the whole chain it reads alive and bears its full cost.  The naive
+    per-view ``2·K·n·m`` sweep price ignores that, overestimating how
+    long incremental maintenance keeps winning (and underestimating the
+    firing costs a fleet scheduler prioritizes by).  Off by default so
+    declared-workload plans stay stable; the fleet turns it on.
+
     ``op_cost_scales`` refines the *re-evaluation* side per op kind
     (keys ``"matmul"`` / ``"inverse"`` / ``"other"``, values =
     wall-clock per FLOP relative to a dense matmul FLOP; missing kinds
@@ -84,6 +95,7 @@ class WorkloadDescriptor:
     reads_per_firing: float = 1.0
     cost_scale: float = 1.0       # wall-clock per-FLOP cost of the sweep
     #                               relative to re-evaluation (calibrated)
+    chain_aware: bool = False     # price the shared delta chain into sweeps
     op_cost_scales: Optional[Dict[str, float]] = None
     mesh_shape: Optional[Tuple[int, ...]] = None
     mesh_axes: Optional[Tuple[str, ...]] = None
@@ -282,6 +294,8 @@ def plan_program(compiled, workload: WorkloadDescriptor, *,
     never_lazy = _trigger_read_views(compiled) | outputs | set(program.inputs)
 
     views: Dict[str, ViewPlan] = {}
+    shapes: Dict[str, Tuple[int, int]] = {}
+    reeval_effs: Dict[str, float] = {}
     for st in program.statements:
         name = st.target.name
         shape = shape_of(st.target, binding)
@@ -305,9 +319,13 @@ def plan_program(compiled, workload: WorkloadDescriptor, *,
             maintain = 2.0 * k * n * m                 # per-firing sweep
             on_demand = workload.reads_per_firing * reeval_eff
             materialize = maintain <= on_demand
+        shapes[name], reeval_effs[name] = shape, reeval_eff
         views[name] = ViewPlan(view=name, strategy=strat,
                                threshold_rank=thr, materialize=materialize,
                                crossover_rank=kstar, reeval_flops=reeval)
+    if workload.chain_aware:
+        _reprice_with_chain(compiled, binding, workload, lo, hi,
+                            views, shapes, reeval_effs)
 
     from .trigger_cache import mesh_cache_key
     wl = workload
@@ -318,6 +336,129 @@ def plan_program(compiled, workload: WorkloadDescriptor, *,
         fingerprint=program_fingerprint(program, binding),
         workload=wl, views=views,
         mesh_key=mesh_cache_key(mesh, mesh_axis))
+
+
+def trigger_chain_costs(trig, binding: Dict[str, int]
+                        ) -> Tuple[Dict[str, float], Dict[str, FrozenSet[str]]]:
+    """Price one trigger's shared delta chain.
+
+    Returns ``(assign_flops, view_deps)``: FLOPs of each trigger assign
+    at the trigger's compiled rank, and — per updated view — the
+    transitive set of assign names its factor blocks read.  The chain is
+    computed once per firing and shared by every view still maintained
+    incrementally; these two maps are what lets a planner decide who
+    pays for it when some views re-evaluate instead.
+    """
+    assign_flops: Dict[str, float] = {}
+    assign_deps: Dict[str, FrozenSet[str]] = {}
+    for a in trig.assigns:
+        direct = set(a.expr.free_vars()) & set(assign_flops)
+        closure = set(direct)
+        for d in direct:
+            closure |= assign_deps[d]
+        assign_flops[a.name] = expr_cost(a.expr, binding).flops
+        assign_deps[a.name] = frozenset(closure)
+    view_deps: Dict[str, FrozenSet[str]] = {}
+    for up in trig.updates:
+        roots = {n for n in (up.u, up.v, up.d)
+                 if n is not None and n in assign_flops}
+        closure = set(roots)
+        for r in roots:
+            closure |= assign_deps[r]
+        view_deps[up.view] = frozenset(closure)
+    return assign_flops, view_deps
+
+
+def _reprice_with_chain(compiled: CompiledProgram, binding, workload,
+                        lo: int, hi: int, views: Dict[str, ViewPlan],
+                        shapes, reeval_effs) -> None:
+    """Chain-aware second pass over a freshly priced plan (in place).
+
+    Per trigger, the delta-chain assigns a view's sweep reads are split
+    evenly among the views that still read them incrementally; a view's
+    per-rank sweep cost becomes ``2·n·m + chain_share`` and its
+    crossover drops accordingly.  Demoting a view to re-evaluation
+    shifts its chain share onto the surviving readers — so the pass
+    iterates to a fixed point (≤ one demotion per round, bounded by the
+    view count).  This is exactly the "lone incremental view keeps the
+    shared chain alive" correction: with every sibling re-evaluated,
+    the last reader bears the whole chain.
+    """
+    chains = [(trigger_chain_costs(trig, binding), max(trig.rank, 1))
+              for trig in compiled.triggers.values()]
+    for _ in range(len(views) + 1):
+        # per-rank chain share each still-incremental view would bear
+        share: Dict[str, float] = {}
+        for (assign_flops, view_deps), rank in chains:
+            live = [w for w, deps in view_deps.items()
+                    if deps and w in views and views[w].strategy != "reeval"]
+            users = {a: sum(1 for w in live if a in view_deps[w])
+                     for a in assign_flops}
+            for w in live:
+                s = sum(assign_flops[a] / max(users[a], 1)
+                        for a in view_deps[w]) / rank
+                share[w] = max(share.get(w, 0.0), s)
+        changed = False
+        for name, s in share.items():
+            vp = views[name]
+            n, m = shapes[name]
+            kstar = max(1, int(reeval_effs[name] / (2.0 * n * m + s)))
+            k_eff = max(1, int(kstar / max(workload.cost_scale, 1e-12)))
+            if hi < k_eff:
+                strat, thr = "incremental", None
+            elif lo >= k_eff:
+                strat, thr = "reeval", None
+            else:
+                strat, thr = "hybrid", k_eff
+            if (strat, thr, kstar) != (vp.strategy, vp.threshold_rank,
+                                       vp.crossover_rank):
+                changed = strat != vp.strategy or changed
+                views[name] = replace(vp, strategy=strat,
+                                      threshold_rank=thr,
+                                      crossover_rank=kstar)
+        if not changed:
+            return
+
+
+def firing_cost_flops(compiled: CompiledProgram, binding: Dict[str, int],
+                      input_name: str, stacked_rank: int, *,
+                      reeval_views: FrozenSet[str] = frozenset(),
+                      workload: Optional[WorkloadDescriptor] = None
+                      ) -> float:
+    """Planner-estimated FLOPs of one trigger firing at ``stacked_rank``.
+
+    Prices the shared delta chain ONCE (only the assigns some
+    incremental view still reads, scaled linearly to the stacked rank),
+    one ``2·K·n·m`` factored sweep per incrementally maintained view,
+    and a full re-evaluation per view in ``reeval_views``.  The sweep
+    side is scaled by the workload's calibrated ``cost_scale`` so the
+    number is in re-evaluation-FLOP equivalents — this is the cost term
+    the fleet scheduler multiplies into its SLO priority, and the place
+    the chain a lone incremental view keeps alive must not be
+    underestimated (ROADMAP carried follow-up).
+    """
+    trig = compiled.triggers[input_name]
+    assign_flops, view_deps = trigger_chain_costs(trig, binding)
+    scale = workload.cost_scale if workload is not None else 1.0
+    k = max(1, int(stacked_rank))
+    by_name = {s.target.name: s for s in compiled.program.statements}
+    total = 0.0
+    live_assigns: set = set()
+    for up in trig.updates:
+        st = by_name.get(up.view)
+        if up.view in reeval_views and st is not None:
+            kinds = expr_cost_kinds(st.expr, binding)
+            total += (workload.effective_reeval_flops(kinds)
+                      if workload is not None else sum(kinds.values()))
+            continue
+        target = st.target if st is not None \
+            else compiled.program.inputs[up.view]
+        n, m = shape_of(target, binding)
+        total += scale * 2.0 * k * n * m
+        live_assigns |= view_deps[up.view]
+    total += scale * sum(assign_flops[a] for a in live_assigns) \
+        * (k / max(trig.rank, 1))
+    return total
 
 
 def plan_for_engine(engine, workload: WorkloadDescriptor) -> MaintenancePlan:

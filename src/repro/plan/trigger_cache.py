@@ -24,19 +24,33 @@ pass ``trigger_cache=TriggerCache()`` for an isolated one (tests).
 from __future__ import annotations
 
 import threading
+from collections import OrderedDict
 from typing import Callable, Dict, Optional, Tuple
 
 
 class TriggerCache:
     """Thread-safe (key → compiled trigger callable) map with hit/miss
     counters.  Keys must be hashable tuples; values are the callables
-    produced by the codegen builders."""
+    produced by the codegen builders.
 
-    def __init__(self):
-        self._fns: Dict[Tuple, Callable] = {}
+    Fleet workers read AND populate this concurrently (N tenants share
+    one cache), so every access — including ``len``/``in``/``stats`` —
+    holds the lock; ``get_or_build`` builds outside it (jit tracing is
+    slow) and lets the first writer win.  ``capacity`` bounds the entry
+    count with LRU eviction (``None`` = unbounded, the default): a
+    multi-tenant service over many distinct programs must not grow
+    compiled-trigger state without bound.
+    """
+
+    def __init__(self, capacity: Optional[int] = None):
+        if capacity is not None and capacity < 1:
+            raise ValueError(f"capacity must be ≥ 1, got {capacity}")
+        self.capacity = capacity
+        self._fns: "OrderedDict[Tuple, Callable]" = OrderedDict()
         self._lock = threading.Lock()
         self.hits = 0
         self.misses = 0
+        self.evictions = 0
 
     def get_or_build(self, key: Tuple, builder: Callable[[], Callable]
                      ) -> Callable:
@@ -46,31 +60,51 @@ class TriggerCache:
             fn = self._fns.get(key)
             if fn is not None:
                 self.hits += 1
+                self._fns.move_to_end(key)
                 return fn
         fn = builder()  # build outside the lock: jit tracing can be slow
         with self._lock:
             won = self._fns.setdefault(key, fn)
+            self._fns.move_to_end(key)
             if won is fn:
                 self.misses += 1
+                self._evict_over_capacity()
             else:
                 self.hits += 1
         return won
 
+    def _evict_over_capacity(self) -> None:
+        # caller holds the lock
+        while self.capacity is not None and len(self._fns) > self.capacity:
+            self._fns.popitem(last=False)
+            self.evictions += 1
+
+    def evict(self, key: Tuple) -> bool:
+        """Drop one entry (e.g. a retired tenant's program); True if it
+        was present.  The callable itself stays valid for holders — only
+        future lookups rebuild."""
+        with self._lock:
+            return self._fns.pop(key, None) is not None
+
     def __len__(self) -> int:
-        return len(self._fns)
+        with self._lock:
+            return len(self._fns)
 
     def __contains__(self, key: Tuple) -> bool:
-        return key in self._fns
+        with self._lock:
+            return key in self._fns
 
     def clear(self) -> None:
         with self._lock:
             self._fns.clear()
             self.hits = 0
             self.misses = 0
+            self.evictions = 0
 
     def stats(self) -> Dict[str, int]:
-        return {"entries": len(self._fns), "hits": self.hits,
-                "misses": self.misses}
+        with self._lock:
+            return {"entries": len(self._fns), "hits": self.hits,
+                    "misses": self.misses, "evictions": self.evictions}
 
 
 _GLOBAL = TriggerCache()

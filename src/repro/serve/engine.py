@@ -33,6 +33,8 @@ class ServeEngine:
     degrade: Optional[Any] = None
     _logit_views: Dict[str, Any] = field(default_factory=dict, init=False)
     _view_guards: Dict[str, Any] = field(default_factory=dict, init=False)
+    _fleet: Optional[Any] = field(default=None, init=False)
+    _fleet_tenants: Dict[str, str] = field(default_factory=dict, init=False)
 
     def __post_init__(self):
         cfg = self.model.cfg
@@ -97,6 +99,30 @@ class ServeEngine:
             from repro.guard import GuardedView
             self._view_guards[weight_path] = GuardedView(view, self.degrade)
 
+    def attach_fleet(self, fleet, tenant_of: Dict[str, str]) -> None:
+        """Back logit views by a shared multi-tenant fleet service.
+
+        ``fleet`` is a :class:`repro.fleet.FleetScheduler`;
+        ``tenant_of`` maps weight paths to tenant ids already registered
+        in it (over :func:`~repro.serve.incremental_views.
+        build_logit_view_program` programs).  Hot-swap deltas for these
+        paths go through the fleet's admission control into the tenant's
+        update log (so they survive worker crashes), reads come from the
+        tenant's committed snapshot, and :meth:`view_health` reports the
+        tenant's lease/breaker/staleness state.  Paths may be fleet- or
+        locally-backed side by side; fleet routing wins where both
+        exist.
+        """
+        from .incremental_views import IncrementalLogitView
+        for path, tenant_id in tenant_of.items():
+            if not IncrementalLogitView.covers(path):
+                raise ValueError(
+                    f"{path!r} is behind a nonlinearity; its cached "
+                    f"views cannot be maintained exactly")
+            fleet.registry.get(tenant_id)   # raises on unknown tenant
+        self._fleet = fleet
+        self._fleet_tenants.update(tenant_of)
+
     def hot_swap(self, weight_path: str, u: jax.Array, v: jax.Array) -> bool:
         """Route a low-rank weight delta ``W += u vᵀ`` to the *cached corpus
         views* maintained for ``weight_path``.
@@ -111,9 +137,19 @@ class ServeEngine:
         ``logits`` read (or an explicit :meth:`flush_views`).  Returns
         True if this enqueue flushed the view (its logits are fresh now).
         """
+        if weight_path in self._fleet_tenants:
+            # fleet-backed: the delta enters the tenant's durable update
+            # log through admission control; workers fire it under a
+            # lease.  True = admitted (refresh is asynchronous, bounded
+            # by the tenant's SLO), False = throttled/shed back-pressure.
+            decision = self._fleet.submit(
+                self._fleet_tenants[weight_path], "W",
+                np.asarray(u, np.float32), np.asarray(v, np.float32))
+            return decision == "admitted"
         if weight_path not in self._logit_views:
             raise KeyError(f"no logit view attached for {weight_path!r}; "
-                           f"have {sorted(self._logit_views)}")
+                           f"have {sorted(self._logit_views)} and fleet "
+                           f"tenants {sorted(self._fleet_tenants)}")
         guard = self._view_guards.get(weight_path)
         if guard is not None:
             # retried + breaker-gated: a repeatedly failing refresh trips
@@ -132,11 +168,15 @@ class ServeEngine:
                 guard.flush()
             else:
                 view.flush()
+        if self._fleet is not None and self._fleet_tenants:
+            self._fleet.drain(self._fleet_tenants.values())
 
     def view_logits(self, weight_path: str):
         """Read one view's logits at bounded staleness: fresh when
         healthy, the last-good snapshot when degraded (unguarded views
         read straight through)."""
+        if weight_path in self._fleet_tenants:
+            return self._fleet.read(self._fleet_tenants[weight_path], "Y")
         guard = self._view_guards.get(weight_path)
         if guard is not None:
             return guard.read()
@@ -152,6 +192,8 @@ class ServeEngine:
             out[path] = (guard.health() if guard is not None
                          else {"breaker": None, "serving": "fresh",
                                "staleness_s": 0.0})
+        for path, tenant_id in self._fleet_tenants.items():
+            out[path] = self._fleet.registry.get(tenant_id).health()
         return out
 
     def replan_views(self, workload) -> Dict[str, Any]:

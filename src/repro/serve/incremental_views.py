@@ -30,6 +30,26 @@ from repro.core import (IncrementalEngine, Program, dim, matmul, transpose,
                         var)
 
 
+def build_logit_view_program(m: int, d: int, p: int) -> Program:
+    """The logit-view program Y = H · Wᵀ as a standalone IR builder.
+
+    H: (m, d) cached corpus hidden states, W: (p, d) output head.
+    Used by :class:`IncrementalLogitView` for a single in-process view
+    and by ``repro.fleet`` tenants — a multi-tenant serving fleet
+    registers one tenant per (corpus, head) pair over this exact
+    program, so same-shape tenants share compiled triggers through the
+    fleet's :class:`~repro.plan.TriggerCache`.
+    """
+    prog = Program(name="logit_view")
+    M, D, P_ = dim("m"), dim("d"), dim("p")
+    H = prog.input("H", (M, D))
+    W = prog.input("W", (P_, D))
+    prog.let("Y", matmul(H, transpose(W)))
+    prog.outputs = ["Y"]
+    prog.bind_dims(m=m, d=d, p=p)
+    return prog
+
+
 class IncrementalLogitView:
     """Maintains Y = H · Wᵀ under rank-k updates to W.
 
@@ -44,13 +64,7 @@ class IncrementalLogitView:
         m, d = hidden.shape
         p, d2 = head.shape
         assert d == d2
-        prog = Program(name="logit_view")
-        M, D, P_ = dim("m"), dim("d"), dim("p")
-        H = prog.input("H", (M, D))
-        W = prog.input("W", (P_, D))
-        prog.let("Y", matmul(H, transpose(W)))
-        prog.outputs = ["Y"]
-        prog.bind_dims(m=m, d=d, p=p)
+        prog = build_logit_view_program(m, d, p)
         self.engine = IncrementalEngine(
             prog, {"W": rank, "H": rank},
             max_batch_rank=max_batch_rank,
