@@ -25,6 +25,7 @@ work unchanged.
 from __future__ import annotations
 
 import functools
+import inspect
 import sys
 import types
 import zlib
@@ -114,8 +115,15 @@ def given(**strategies: SearchStrategy):
 
         # pytest resolves fixtures via inspect.signature, which follows
         # __wrapped__ back to the original and would mistake the drawn
-        # parameters for fixtures — hide the link.
+        # parameters for fixtures — hide the link, and expose the
+        # residual signature (original minus drawn params) so fixtures
+        # and @pytest.mark.parametrize arguments still compose with
+        # @given, as they do under the real hypothesis.
         del wrapper.__wrapped__
+        residual = [p for name, p in
+                    inspect.signature(fn).parameters.items()
+                    if name not in strategies]
+        wrapper.__signature__ = inspect.Signature(residual)
         return wrapper
 
     return decorate

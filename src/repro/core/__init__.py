@@ -14,10 +14,11 @@ from .program import Program, Statement, dim
 from .factored import (DeltaRep, DenseDelta, HStack, LowRank,
                        pad_factors_to_rank, recompress_factors,
                        stack_update_arrays)
-from .delta import DeltaEnv, derive, IncrementalInverseError
-from .compiler import (Assign, CompiledProgram, Trigger, ViewUpdate,
-                       batch_bucket, compile_batched_trigger, compile_program,
-                       extract_inverse_views)
+from .delta import DeltaEnv, derive, derive_delta, IncrementalInverseError
+from .compiler import (Assign, CompiledProgram, DeltaView, Trigger,
+                       ViewUpdate, batch_bucket, compile_batched_trigger,
+                       compile_delta_trigger, compile_program,
+                       delta_view_name, extract_inverse_views)
 from .codegen import build_evaluator, build_trigger_fn, evaluate
 from .runtime import EngineStats, IncrementalEngine, ReevalEngine, max_abs_diff
 from .cost import (Cost, batch_crossover_rank, batched_apply_cost,
@@ -32,10 +33,10 @@ __all__ = [
     "Program", "Statement", "dim",
     "DeltaRep", "DenseDelta", "HStack", "LowRank",
     "pad_factors_to_rank", "recompress_factors", "stack_update_arrays",
-    "DeltaEnv", "derive", "IncrementalInverseError",
-    "Assign", "CompiledProgram", "Trigger", "ViewUpdate",
-    "batch_bucket", "compile_batched_trigger",
-    "compile_program", "extract_inverse_views",
+    "DeltaEnv", "derive", "derive_delta", "IncrementalInverseError",
+    "Assign", "CompiledProgram", "DeltaView", "Trigger", "ViewUpdate",
+    "batch_bucket", "compile_batched_trigger", "compile_delta_trigger",
+    "compile_program", "delta_view_name", "extract_inverse_views",
     "build_evaluator", "build_trigger_fn", "evaluate",
     "EngineStats", "IncrementalEngine", "ReevalEngine", "max_abs_diff",
     "Cost", "batch_crossover_rank", "batched_apply_cost", "batched_strategy",

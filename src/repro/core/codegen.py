@@ -345,9 +345,10 @@ def build_planned_trigger_fn(trigger: Trigger, program: Program,
         core = jax.jit(core, donate_argnums=(0,) if donate else ())
 
     def run(views: Env, u: Array, v: Array) -> Env:
+        if not jit:  # jitted cores convert np factors on the C++ arg path
+            u, v = jnp.asarray(u), jnp.asarray(v)
         new_vals = core(tuple(views[n] for n in written),
-                        tuple(views[n] for n in read_only),
-                        jnp.asarray(u), jnp.asarray(v))
+                        tuple(views[n] for n in read_only), u, v)
         views.update(zip(written, new_vals))
         return views
 
@@ -371,7 +372,11 @@ def trigger_flops(trigger: Trigger, program: Program,
     name_to_var = {**{k: v for k, v in program.inputs.items()},
                    **{s.target.name: s.target for s in program.statements}}
     for up in trigger.updates:
-        view = name_to_var[up.view]
+        base = up.view
+        if base not in name_to_var and base.startswith("__d"):
+            # ΔᵈV auxiliary views share the base view's shape
+            base = base.split("__", 2)[-1]
+        view = name_to_var[base]
         n, m = shape_of(view, binding)
         if up.kind == "lowrank":
             k = next(a.expr for a in trigger.assigns if a.name == up.u).shape[1] \

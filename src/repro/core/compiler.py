@@ -23,7 +23,7 @@ from typing import Dict, List, Literal, Optional, Sequence, Tuple
 
 from . import expr as ex
 from .cost import Cost, dense_delta_cost, expr_cost, lowrank_cost, shape_of
-from .delta import DeltaEnv, derive
+from .delta import DeltaEnv, IncrementalInverseError, derive, derive_delta
 from .expr import Expr, Var
 from .factored import DeltaRep, DenseDelta, HStack, LowRank, _hstack
 from .program import Program, Statement
@@ -73,6 +73,30 @@ class Trigger:
         return "\n".join(lines)
 
 
+def delta_view_name(view: str, depth: int) -> str:
+    """Canonical name of the materialized ΔᵈV auxiliary view."""
+    return f"__d{depth}__{view}"
+
+
+@dataclass(frozen=True)
+class DeltaView:
+    """A materialized k-th order delta view ΔᵈV (auxiliary view, §6 /
+    DBToaster's recursive delta hierarchy).
+
+    ``rank`` is the factored rank of the Δᵈ representation at the compile
+    update rank (0 for a dense rep); ``flops`` prices one evaluation of the
+    rep's blocks — the trigger cost of maintaining the view.
+    """
+
+    name: str          # "__d{depth}__{view}"
+    view: str          # the base view this is a delta of
+    input_name: str
+    depth: int
+    kind: Literal["lowrank", "dense"]
+    rank: int
+    flops: float
+
+
 @dataclass
 class CompiledProgram:
     program: Program
@@ -83,6 +107,16 @@ class CompiledProgram:
     # batch-size bucket) share the same derivation choices
     force_rep: Optional[str] = None
     sequential_sm: bool = False
+    # maximum delta depth derived at compile time (1 = classic first order)
+    order: int = 1
+    # (input, depth) -> {view -> DeltaView}: the ΔᵈV materialization
+    # candidates registered when order >= 2 (absent views have Δᵈ ≡ 0)
+    delta_views: Dict[Tuple[str, int], Dict[str, DeltaView]] = \
+        field(default_factory=dict)
+    # (input, depth) -> views whose Δᵈ derivation is unsupported (the
+    # Woodbury capacitance inverse has no materialized view at depth >= 2)
+    delta_unsupported: Dict[Tuple[str, int], Tuple[str, ...]] = \
+        field(default_factory=dict)
 
 
 # ---------------------------------------------------------------------------
@@ -144,8 +178,19 @@ def compile_program(
     *,
     force_rep: Optional[str] = None,      # "lowrank" | "dense" | None=cost-based
     sequential_sm: bool = False,          # paper-faithful SM chain vs Woodbury
+    order: int = 1,                       # max delta depth to derive (>= 1)
 ) -> CompiledProgram:
-    """Alg. 1: one trigger per dynamic input matrix."""
+    """Alg. 1: one trigger per dynamic input matrix.
+
+    ``order >= 2`` additionally derives the ΔᵈV hierarchy per input for
+    depths 2..order and registers each non-zero ΔᵈV as a first-class
+    materialization candidate (:class:`DeltaView`); the depth-d trigger
+    itself is compiled on demand by :func:`compile_delta_trigger`.  Views
+    whose Δᵈ cannot be derived (the inverse error path) are recorded in
+    ``delta_unsupported`` instead of failing the whole program.
+    """
+    if order < 1:
+        raise ValueError(f"order must be >= 1, got {order}")
     program = extract_inverse_views(program)
     update_ranks = update_ranks or {name: 1 for name in program.inputs}
     binding = dict(program.dims)
@@ -162,9 +207,140 @@ def compile_program(
         triggers[input_name] = _compile_trigger(
             program, input_name, rank, views, binding,
             force_rep=force_rep, sequential_sm=sequential_sm)
-    return CompiledProgram(program=program, triggers=triggers,
-                           statements=list(program.statements),
-                           force_rep=force_rep, sequential_sm=sequential_sm)
+    compiled = CompiledProgram(program=program, triggers=triggers,
+                               statements=list(program.statements),
+                               force_rep=force_rep, sequential_sm=sequential_sm,
+                               order=order)
+    if order >= 2:
+        for input_name, rank in update_ranks.items():
+            _register_delta_views(compiled, input_name, rank, binding)
+    return compiled
+
+
+def _raw_delta_reps(program: Program, input_name: str, rank: int,
+                    *, sequential_sm: bool):
+    """Per-statement *raw* first-order reps with view deltas inlined.
+
+    Unlike :func:`_compile_trigger`, downstream statements see the full
+    factor expressions of upstream deltas (not renamed ``dU_V`` vars), so
+    the result can be differentiated again by :func:`derive_delta`.
+    """
+    views: Dict[int, Expr] = {id(st.expr): st.target
+                              for st in program.statements}
+    x = program.inputs[input_name]
+    u = ex.var(f"dU_{input_name}", (x.shape[0], rank))
+    v = ex.var(f"dV_{input_name}", (x.shape[1], rank))
+    env = DeltaEnv(views=views, sequential_sm=sequential_sm)
+    env.deltas[input_name] = LowRank.outer(u, v)
+    reps: Dict[str, DeltaRep] = {}
+    for st in program.statements:
+        d = derive(st.expr, env)
+        if not d.is_zero():
+            env.deltas[st.target.name] = d
+        reps[st.target.name] = d
+    return env, reps, u, v
+
+
+def _register_delta_views(compiled: CompiledProgram, input_name: str,
+                          rank: int, binding: Dict[str, int]) -> None:
+    program = compiled.program
+    env, reps, _, _ = _raw_delta_reps(
+        program, input_name, rank, sequential_sm=compiled.sequential_sm)
+    current: Dict[str, DeltaRep] = dict(reps)
+    for depth in range(2, compiled.order + 1):
+        registry: Dict[str, DeltaView] = {}
+        unsupported: List[str] = []
+        nxt: Dict[str, DeltaRep] = {}
+        for st in program.statements:
+            name = st.target.name
+            d = current.get(name)
+            if d is None or d.is_zero():
+                continue
+            try:
+                dd = derive_delta(d, env)
+            except IncrementalInverseError:
+                unsupported.append(name)
+                continue
+            nxt[name] = dd
+            if dd.is_zero():
+                continue  # Δᵈ ≡ 0: hierarchy exhausted for this view
+            if isinstance(dd, DenseDelta):
+                kind, k = "dense", 0
+                flops = expr_cost(dd.value, binding).flops
+            else:
+                kind, k = "lowrank", dd.rank
+                flops = lowrank_cost(dd, binding).flops
+            registry[name] = DeltaView(
+                name=delta_view_name(name, depth), view=name,
+                input_name=input_name, depth=depth, kind=kind,
+                rank=k, flops=flops)
+        compiled.delta_views[(input_name, depth)] = registry
+        if unsupported:
+            compiled.delta_unsupported[(input_name, depth)] = tuple(unsupported)
+        current = nxt
+
+
+def compile_delta_trigger(compiled: CompiledProgram, input_name: str,
+                          depth: int, rank: Optional[int] = None) -> Trigger:
+    """Compile the trigger maintaining the ΔᵈV views for one input.
+
+    The trigger reads the *pre-update* base views plus the update factors
+    (same ``dU_*``/``dV_*`` signature as the base trigger — every level of
+    the diagonal hierarchy is driven by the same update) and writes the
+    ``__d{depth}__V`` auxiliary views.  Raises
+    :class:`IncrementalInverseError` if any view's Δᵈ is unsupported at
+    this depth — the inverse error path is a hard error here because a
+    partial hierarchy cannot be folded.
+    """
+    if depth < 1:
+        raise ValueError(f"depth must be >= 1, got {depth}")
+    program = compiled.program
+    if input_name not in program.inputs:
+        raise KeyError(f"{input_name} is not an input of {program.name}")
+    if rank is None:
+        rank = compiled.triggers[input_name].rank
+    if depth == 1:
+        return compile_batched_trigger(compiled, input_name, rank)
+    env, reps, u, v = _raw_delta_reps(
+        program, input_name, rank, sequential_sm=compiled.sequential_sm)
+    binding = dict(program.dims)
+
+    trig = Trigger(input_name=input_name, rank=rank, u_var=u, v_var=v)
+    total = Cost.zero()
+    for st in program.statements:
+        name = st.target.name
+        d = reps.get(name)
+        if d is None or d.is_zero():
+            continue
+        try:
+            for _ in range(depth - 1):
+                d = derive_delta(d, env)
+                if d.is_zero():
+                    break
+        except IncrementalInverseError as err:
+            raise IncrementalInverseError(
+                f"Δ^{depth} of view {name!r} is unsupported: {err}") from err
+        if d.is_zero():
+            continue
+        dview = delta_view_name(name, depth)
+        rep = _choose_rep(d, st, binding, compiled.force_rep)
+        if rep == "dense" or isinstance(d, DenseDelta):
+            dname = f"dD_{dview}"
+            dexpr = d.value if isinstance(d, DenseDelta) else d.to_expr()
+            trig.assigns.append(Assign(dname, dexpr))
+            trig.updates.append(ViewUpdate(view=dview, kind="dense", d=dname))
+            total = total + expr_cost(dexpr, binding)
+            trig.reps[dview] = "dense"
+        else:
+            uname, vname = f"dU_{dview}", f"dV_{dview}"
+            trig.assigns.append(Assign(uname, _hstack(d.left)))
+            trig.assigns.append(Assign(vname, _hstack(d.right)))
+            trig.updates.append(ViewUpdate(view=dview, kind="lowrank",
+                                           u=uname, v=vname))
+            total = total + lowrank_cost(d, binding)
+            trig.reps[dview] = "lowrank"
+    trig.cost = total
+    return trig
 
 
 # ---------------------------------------------------------------------------

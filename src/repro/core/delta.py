@@ -12,6 +12,17 @@ expands to the same expression, so a single recursive pass suffices.
 All variables in the produced expressions denote *pre-update* values, which
 matches trigger semantics: every factor block is evaluated first, the
 ``+=`` updates are applied last (Alg. 1 / Example 4.6).
+
+``derive(E, env, order=k)`` with ``k ≥ 2`` produces the k-th order delta
+(delta-of-delta, DBToaster arXiv 1207.0137): Δ applied recursively to
+the Δᵏ⁻¹ representation.  For a polynomial program of degree d the
+hierarchy terminates — ``Δ^(d+1) E ≡ 0`` — and each level's blocks read
+*less* of the base views than the last (Δ² of a quadratic reads none),
+which is exactly why materializing the hierarchy makes triggers
+asymptotically cheaper.  The inverse (Woodbury) rule does not extend
+past first order without materializing the capacitance inverse, so
+deriving through it raises :class:`IncrementalInverseError` — the
+compiler records such views as unsupported at depth ≥ 2.
 """
 
 from __future__ import annotations
@@ -21,8 +32,8 @@ from typing import Callable, Dict, Optional
 
 from . import expr as ex
 from .expr import Expr
-from .factored import (DeltaRep, DenseDelta, LowRank, lowrank_add,
-                       lowrank_inverse_woodbury, lowrank_matmul)
+from .factored import (ColSlice, DeltaRep, DenseDelta, HStack, LowRank,
+                       lowrank_add, lowrank_inverse_woodbury, lowrank_matmul)
 
 
 @dataclass
@@ -51,10 +62,67 @@ def is_static(e: Expr, env: DeltaEnv) -> bool:
     return not any(v in env.deltas for v in e.free_vars())
 
 
-def derive(e: Expr, env: DeltaEnv) -> DeltaRep:
-    """Total delta of ``e`` under the updates in ``env``."""
+def derive(e: Expr, env: DeltaEnv, order: int = 1,
+           steps: Optional[list] = None) -> DeltaRep:
+    """Total delta of ``e`` under the updates in ``env``.
+
+    ``order`` selects the delta depth.  ``order <= 1`` (including the
+    degenerate ``order=0``) is the classic first-order total delta and is
+    bit-identical to the pre-existing behavior.  ``order=k`` applies Δ
+    recursively ``k`` times; by default every level differentiates w.r.t.
+    the *same* update symbols (the diagonal Δᵏ E(A; d, …, d), which is what
+    a materialized ΔᵏV view maintains).  ``steps`` optionally supplies a
+    distinct :class:`DeltaEnv` per extra level for mixed-update algebra
+    tests: ``len(steps) == order - 1``.
+    """
+    if order < 0:
+        raise ValueError(f"delta order must be >= 0, got {order}")
     d = _derive(e, env, {})
+    if order <= 1:
+        return d
+    envs = list(steps) if steps is not None else [env] * (order - 1)
+    if len(envs) != order - 1:
+        raise ValueError(
+            f"steps must supply {order - 1} environments, got {len(envs)}")
+    for env_j in envs:
+        if d.is_zero():
+            return LowRank.zero()
+        d = derive_delta(d, env_j)
     return d
+
+
+def derive_delta(d: DeltaRep, env: DeltaEnv) -> DeltaRep:
+    """Δ of a delta *representation* — one level of delta-of-delta.
+
+    A factored rep Σᵢ lᵢ·rᵢᵀ is differentiated blockwise with the product
+    rule Δ(l·rᵀ) = Δl·rᵀ + l·Δrᵀ + Δl·Δrᵀ; a dense rep falls back to the
+    expression-level rules.  The update symbols themselves (``dU_*`` /
+    ``dV_*`` vars) carry no registered delta, so they are constants at the
+    next level — exactly DBToaster's Δ-hierarchy semantics.
+    """
+    if isinstance(d, DenseDelta):
+        return _derive(d.value, env, {})
+    if d.is_zero():
+        return LowRank.zero()
+    cache: Dict[int, DeltaRep] = {}
+    parts = []
+    for l, r in zip(d.left, d.right):
+        dl = _derive(l, env, cache)
+        dr = _derive(r, env, cache)
+        if dl.is_zero() and dr.is_zero():
+            continue
+        rt = ex.transpose(r)
+        drt = dr if dr.is_zero() else dr.transpose()
+        if isinstance(dl, DenseDelta) or isinstance(drt, DenseDelta):
+            parts.append(_dense_matmul_rule_on(l, rt, dl, drt))
+        else:
+            parts.append(lowrank_matmul(dl, l, drt, rt))
+    if not parts:
+        return LowRank.zero()
+    if any(isinstance(p, DenseDelta) for p in parts):
+        shape = d.shape
+        return DenseDelta(ex.add(*[_as_dense(p, shape) for p in parts]))
+    return lowrank_add(*parts)
 
 
 def _derive(e: Expr, env: DeltaEnv, cache: Dict[int, DeltaRep]) -> DeltaRep:
@@ -116,6 +184,18 @@ def _derive_impl(e: Expr, env: DeltaEnv, cache) -> DeltaRep:
             return DenseDelta(ex.sub(ex.inverse(new_op), view))
         return lowrank_inverse_woodbury(view, d, sequential=env.sequential_sm)
 
+    if isinstance(e, (HStack, ColSlice)):
+        # these nodes exist only inside Woodbury / Sherman–Morrison
+        # first-order reps; meeting one here means Δ is being applied
+        # *through* an inverse rule, which does not extend past first
+        # order without materializing the capacitance inverse
+        if is_static(e, env):
+            return LowRank.zero()
+        raise IncrementalInverseError(
+            f"Δ through a Woodbury/SM block operand "
+            f"({type(e).__name__}) is unsupported: the inverse rule "
+            f"does not extend past first order")
+
     raise TypeError(f"no delta rule for {type(e).__name__}")
 
 
@@ -132,25 +212,30 @@ def _as_dense(d: DeltaRep, shape) -> Expr:
 
 
 def _dense_matmul_rule(e: ex.MatMul, d1: DeltaRep, d2: DeltaRep) -> DenseDelta:
+    return _dense_matmul_rule_on(e.lhs, e.rhs, d1, d2)
+
+
+def _dense_matmul_rule_on(lhs: Expr, rhs: Expr,
+                          d1: DeltaRep, d2: DeltaRep) -> DenseDelta:
     """Hybrid product rule: keep the result as one matrix, but evaluate any
     factored operand in its cheap (skinny-first) association."""
     terms = []
     if not d1.is_zero():
         if isinstance(d1, LowRank):
             # (P1 Q1ᵀ) E2  →  P1 (E2ᵀ Q1)ᵀ — still O(k·n²)
-            terms.extend(ex.matmul(l, ex.transpose(ex.matmul(ex.transpose(e.rhs), r)))
+            terms.extend(ex.matmul(l, ex.transpose(ex.matmul(ex.transpose(rhs), r)))
                          for l, r in zip(d1.left, d1.right))
         else:
-            terms.append(ex.matmul(d1.value, e.rhs))
+            terms.append(ex.matmul(d1.value, rhs))
     if not d2.is_zero():
         if isinstance(d2, LowRank):
-            terms.extend(ex.matmul(ex.matmul(e.lhs, l), ex.transpose(r))
+            terms.extend(ex.matmul(ex.matmul(lhs, l), ex.transpose(r))
                          for l, r in zip(d2.left, d2.right))
         else:
-            terms.append(ex.matmul(e.lhs, d2.value))
+            terms.append(ex.matmul(lhs, d2.value))
     if not d1.is_zero() and not d2.is_zero():
-        a = _as_dense(d1, e.lhs.shape)
-        b = _as_dense(d2, e.rhs.shape)
+        a = _as_dense(d1, lhs.shape)
+        b = _as_dense(d2, rhs.shape)
         terms.append(ex.matmul(a, b))
     return DenseDelta(ex.add(*terms))
 

@@ -32,10 +32,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .codegen import (build_evaluator, build_planned_trigger_fn,
-                      build_trigger_fn, evaluate, trigger_flops)
+from .codegen import (_get_apply_fn, build_evaluator,
+                      build_planned_trigger_fn, build_trigger_fn, evaluate,
+                      trigger_flops)
 from .compiler import (CompiledProgram, Trigger, batch_bucket,
-                       compile_batched_trigger, compile_program)
+                       compile_batched_trigger, compile_delta_trigger,
+                       compile_program)
 from .factored import (pad_factors_to_rank, recompress_factors,
                        stack_update_arrays)
 from .program import Program
@@ -70,6 +72,13 @@ class EngineStats:
     # AdaptivePlanner.refit_from_stats turns into an online cost_scale.
     sweep_flops_timed: float = 0.0
     reeval_flops_timed: float = 0.0
+    # deferred-cascade (depth >= 2) maintenance counters
+    folds: int = 0                # window folds (all tiers folded = 1)
+    fold_sweeps: int = 0          # views folded via one stacked sweep
+    fold_reevals: int = 0         # views folded via re-evaluation
+    fold_aborts: int = 0          # folds rolled back (guard/chaos), then redone
+    reads: int = 0                # output() calls — the read-rate signal that
+                                  # online depth selection divides firings by
 
     def per_update_seconds(self) -> float:
         return self.trigger_seconds / max(self.updates_timed, 1)
@@ -95,7 +104,10 @@ class IncrementalEngine:
                  plan=None,
                  trigger_cache=None,
                  guard=None,
-                 chaos=None):
+                 chaos=None,
+                 order=None,
+                 fold_window: int = 8,
+                 max_fold_rank: Optional[int] = 64):
         """``flush_policy`` picks how :meth:`enqueue_update` decides to
         flush: ``"fixed"`` trips on the ``flush_size``/``flush_age``
         thresholds; ``"cost"`` asks the §4/§7 cost model instead — the
@@ -127,14 +139,60 @@ class IncrementalEngine:
         :class:`~repro.guard.ChaosMonkey`) injects deterministic
         faults — update poisoning and in-trigger raises — so the guard's
         recovery paths are exercised, not trusted.
+
+        ``order`` turns on higher-order (deferred-cascade) maintenance:
+        an int applies the depth to every view, a ``{view: depth}`` dict
+        assigns per view.  Views with effective depth ``o >= 2`` are not
+        swept per firing; their window of updates accumulates in factored
+        form and is **folded** — one stacked sweep (or re-evaluation,
+        whichever the §7 crossover prefers) from the window-start base —
+        every ``fold_window**(o-1)`` firings or at the next read, which is
+        the operational form of DBToaster's Δᵏ hierarchy in LINVIEW's
+        continuous setting (the first-order coefficient views are already
+        materialized; what the hierarchy buys is fold amortization).
+        Depth assignments are resolved so a producer view is never
+        staler than its consumers.  ``max_fold_rank`` caps the stacked
+        window rank via QR/SVD re-compression.  When a maintenance
+        ``plan`` carries per-view ``order`` fields (depth-priced by
+        ``plan_program``), the plan's depths are authoritative.
         """
         if flush_policy not in ("fixed", "cost"):
             raise ValueError(f"unknown flush_policy {flush_policy!r}")
+        if isinstance(order, dict):
+            requested_orders = {k: int(v) for k, v in order.items()}
+            compile_order = max([1, *requested_orders.values()])
+        elif order is not None:
+            compile_order = max(1, int(order))
+            requested_orders = None  # all views, filled after compile
+        else:
+            compile_order, requested_orders = 1, {}
         self.compiled: CompiledProgram = compile_program(
             program, update_ranks, force_rep=force_rep,
-            sequential_sm=sequential_sm)
+            sequential_sm=sequential_sm, order=compile_order)
         self.program = self.compiled.program
         self.binding = dict(self.program.dims)
+        if requested_orders is None:
+            requested_orders = {st.target.name: compile_order
+                                for st in self.program.statements}
+        else:
+            unknown = set(requested_orders) - {
+                st.target.name for st in self.program.statements}
+            if unknown:
+                raise KeyError(f"order assigns unknown views: {sorted(unknown)}")
+        self.fold_window = max(2, int(fold_window))
+        self.max_fold_rank = max_fold_rank
+        self._delta_fns: Dict[Tuple, Callable] = {}
+        self._view_orders: Dict[str, int] = \
+            self._resolve_view_orders(requested_orders)
+        self._deferred: frozenset = frozenset(
+            n for n, o in self._view_orders.items() if o >= 2)
+        self._tiers: Tuple[int, ...] = tuple(
+            sorted({o for o in self._view_orders.values() if o >= 2}))
+        self._tier_factors: Dict[int, Dict[str, List]] = \
+            {o: {} for o in self._tiers}
+        self._tier_firings: Dict[int, int] = {o: 0 for o in self._tiers}
+        self._tier_base: Dict[int, Dict[str, Array]] = \
+            {o: {} for o in self._tiers}
         self._jit = jit
         self._apply_backend = apply_backend
         self._donate = donate
@@ -200,7 +258,278 @@ class IncrementalEngine:
         # then defer its own finite screen into that same program
         self._guard_fast_path = (
             self.guard is not None and self.guard.fused_path_ok
-            and self.plan is None and self.flush_policy != "cost")
+            and self.plan is None and self.flush_policy != "cost"
+            and not self._deferred)
+
+    # -- higher-order (deferred-cascade) maintenance ---------------------------
+    def _resolve_view_orders(self, requested: Dict[str, int]
+                             ) -> Dict[str, int]:
+        """Effective per-view depth: a producer may never be staler than
+        its consumers, so each view's requested depth is clamped to the
+        minimum effective depth of the views that read it (inputs are
+        always first-order)."""
+        names = {st.target.name for st in self.program.statements}
+        consumers: Dict[str, List[str]] = {}
+        for st in self.program.statements:
+            for vname in st.expr.free_vars():
+                if vname in names and vname != st.target.name:
+                    consumers.setdefault(vname, []).append(st.target.name)
+        eff: Dict[str, int] = {}
+        for st in reversed(self.program.statements):
+            name = st.target.name
+            o = max(1, int(requested.get(name, 1)))
+            for c in consumers.get(name, ()):
+                o = min(o, eff[c])
+            eff[name] = o
+        return eff
+
+    def _window(self, o: int) -> int:
+        return max(1, self.fold_window ** (o - 1))
+
+    def _cascade_pending(self) -> bool:
+        return any(fs for o in self._tiers
+                   for fs in self._tier_factors[o].values())
+
+    def _cascade_rebase_all(self) -> None:
+        self._pending_input = {}
+        for o in self._tiers:
+            self._tier_factors[o] = {}
+            self._tier_firings[o] = 0
+            self._tier_base[o] = dict(self.views)
+
+    def _cascade_snapshot(self):
+        """Cascade state for transactional rollback (window factors,
+        window-start bases, firing counters) — pointer copies only."""
+        if not self._tiers:
+            return None
+        return ({o: {k: list(v) for k, v in self._tier_factors[o].items()}
+                 for o in self._tiers},
+                {o: dict(self._tier_base[o]) for o in self._tiers},
+                dict(self._tier_firings))
+
+    def _cascade_restore(self, snap) -> None:
+        if snap is None:
+            return
+        factors, base, firings = snap
+        self._tier_factors = {o: {k: list(v) for k, v in factors[o].items()}
+                              for o in factors}
+        self._tier_base = {o: dict(base[o]) for o in base}
+        self._tier_firings = dict(firings)
+
+    def _cascade_accumulate(self, input_name: str, pairs,
+                            defer_input: bool = False) -> None:
+        """Append one admitted firing's (pre-padding) factors to every
+        tier's window, re-compressing at the rank cap, then fold any tier
+        whose window is due.  ``pairs`` is the firing's update list (a
+        whole batch still ticks each window once).  With ``defer_input``
+        the factors are also banked — exactly, outside any rank cap —
+        for :meth:`_apply_pending_inputs` to replay onto the input at
+        the next fold."""
+        norm = []
+        for u, v in pairs:
+            u = np.asarray(u, dtype=np.float32)
+            v = np.asarray(v, dtype=np.float32)
+            if u.ndim == 1:
+                u = u[:, None]
+            if v.ndim == 1:
+                v = v[:, None]
+            norm.append((u, v))
+        if defer_input:
+            self._pending_input.setdefault(input_name, []).extend(norm)
+        for o in self._tiers:
+            fs = self._tier_factors[o].setdefault(input_name, [])
+            fs.extend(norm)
+            self._tier_firings[o] += 1
+            if self.max_fold_rank is not None:
+                rank = sum(a.shape[1] for a, _ in fs)
+                if rank > self.max_fold_rank:
+                    P, Q = stack_update_arrays(fs)
+                    P, Q = recompress_factors(P, Q,
+                                              max_rank=self.max_fold_rank,
+                                              tol=self.recompress_tol)
+                    self._tier_factors[o][input_name] = \
+                        [(np.asarray(P), np.asarray(Q))]
+                    self.stats.recompressions += 1
+        self._maybe_fold()
+
+    def _inputs_deferrable(self, input_name: str) -> bool:
+        """True when nothing this trigger maintains needs to be current
+        between folds: every maintained target is a deferred (depth >= 2)
+        view and no guard/chaos/plan layer expects a per-firing
+        transaction or partition decision.  The firing then banks its
+        raw factors — no stacking, no padding, no device dispatch — and
+        the input apply itself becomes part of the fold."""
+        if not self._tiers or self.guard is not None \
+                or self.chaos is not None or self.plan is not None \
+                or self.planner is not None or self.mesh is not None:
+            return False
+        targets = {up.view for up in
+                   self.compiled.triggers[input_name].updates}
+        return (targets - {input_name}) <= self._deferred
+
+    def _apply_pending_inputs(self) -> Dict[str, Tuple]:
+        """Materialize deferred input state: one stacked GEMM per input
+        applies everything banked since the last fold.  The banked
+        factors are exact (never rank-capped), so the input is bitwise
+        a function of the update stream alone — replay engines folding
+        on the same cadence reproduce it identically.  Returns the
+        stacked factors per input (``(P, Q, n_pairs)``) so the fold's
+        sweep can reuse them instead of re-stacking the same window."""
+        stacked: Dict[str, Tuple] = {}
+        for input_name, pairs in self._pending_input.items():
+            if not pairs:
+                continue
+            P, Q = stack_update_arrays(pairs)
+            apply_fn = _get_apply_fn(self._apply_backend)
+            self.views[input_name] = apply_fn(
+                self.views[input_name], jnp.asarray(P), jnp.asarray(Q))
+            stacked[input_name] = (P, Q, len(pairs))
+            pairs.clear()
+        return stacked
+
+    def _maybe_fold(self) -> None:
+        due = [o for o in self._tiers
+               if self._tier_firings[o] >= self._window(o)]
+        if due:
+            self._fold(max(due))
+
+    def _fold(self, upto: int) -> None:
+        """Fold the pending windows of every tier <= ``upto``, lowest
+        first (a tier's fold reads its ancestors' *current* values, and
+        lower tiers are never staler than higher ones).
+
+        Guarded engines run the fold transactionally: snapshot → (chaos)
+        → fold → finite-check, with rollback + an exact re-evaluation
+        fallback on failure — a fold is a firing as far as containment
+        is concerned."""
+        tiers = [o for o in self._tiers if o <= upto]
+        if not tiers:
+            return
+        # deferred-input engines bank the raw input factors per firing;
+        # the fold is where the input state materializes (one stacked
+        # GEMM — the same FLOPs as the per-firing applies it replaces)
+        self._fold_prestacked = self._apply_pending_inputs()
+        guarded = self.guard is not None and self.guard.config.transactional
+        if guarded or self.chaos is not None:
+            from repro.guard.txn import (FiringAborted, check_finite,
+                                         restore_snapshot, take_snapshot)
+            snap = take_snapshot(self) if guarded else None
+            try:
+                if self.chaos is not None:
+                    self.chaos.maybe_raise_in_trigger()
+                folded: set = set()
+                for o in tiers:
+                    folded |= self._fold_tier(o)
+                if guarded and folded:
+                    reason = check_finite(self.views, folded)
+                    if reason is not None:
+                        raise FiringAborted(reason, "<fold>", "validate")
+            except Exception:
+                if snap is None:
+                    raise  # unguarded chaos: propagate like any kernel error
+                restore_snapshot(self, snap)
+                self.stats.fold_aborts += 1
+                self.guard.stats.rollbacks += 1
+                # exact, chaos-free fallback: re-evaluate the deferred
+                # views from their (current) ancestors
+                for o in tiers:
+                    self._fold_tier(o, force_reeval=True)
+        else:
+            for o in tiers:
+                self._fold_tier(o)
+        self._fold_prestacked = {}
+        self.stats.folds += 1
+
+    def _fold_tier(self, o: int, force_reeval: bool = False) -> set:
+        """Fold one tier's window and rebase it on the resulting store.
+        Returns the set of view names the fold wrote."""
+        targets = {n for n, oo in self._view_orders.items() if oo == o}
+        factors = self._tier_factors.get(o, {})
+        touched = [n for n, fs in factors.items() if fs]
+        folded: set = set()
+        if targets and touched:
+            affected: set = set()
+            for input_name in touched:
+                affected |= {up.view for up in
+                             self.compiled.triggers[input_name].updates}
+            affected &= targets
+            if affected:
+                if force_reeval or len(touched) > 1:
+                    # multi-input windows interleave updates to different
+                    # inputs; re-evaluation from current ancestors is the
+                    # always-exact fold for any mix
+                    folded = self._fold_reeval(affected)
+                else:
+                    folded = self._fold_sweep(o, touched[0], affected)
+        self._tier_factors[o] = {}
+        self._tier_firings[o] = 0
+        self._tier_base[o] = dict(self.views)
+        self._stale -= targets
+        return folded
+
+    def _fold_reeval(self, affected: set) -> set:
+        # one fused jitted re-evaluation from the (current) inputs
+        # instead of an eager per-statement walk: at fold time the walk
+        # pays ~2x the evaluator's cost in per-op dispatch alone, and
+        # the fold IS the amortized price the depth-2 plan is built on.
+        # Non-affected targets the evaluator recomputes are simply not
+        # written back; replay/oracle engines fold through this same
+        # path, so determinism comparisons stay bit-identical.
+        computed = self._evaluator({k: self.views[k]
+                                    for k in self.program.inputs})
+        for name in affected:
+            self.views[name] = computed[name]
+        self.stats.fold_reevals += len(affected)
+        return set(affected)
+
+    def _fold_sweep(self, o: int, input_name: str, affected: set) -> set:
+        """Single-input window fold: stack the window's factors and sweep
+        each affected view ONCE from the tier's window-start base (the
+        trigger's pre-update contract makes this exact), falling back to
+        re-evaluation per view past its §7 crossover at the window rank."""
+        from .cost import batched_strategy
+        fs = self._tier_factors[o][input_name]
+        pre = getattr(self, "_fold_prestacked", {}).get(input_name)
+        if pre is not None and pre[2] == len(fs):
+            # this tier's window is exactly the pending-input set the
+            # fold just applied (both are "every update since time X"
+            # append-only logs, so equal length ⇒ equal content): reuse
+            # its stacked factors instead of re-concatenating the window
+            P, Q = pre[0], pre[1]
+        else:
+            P, Q = stack_update_arrays(fs)
+        r = int(P.shape[1])
+        costs = {name: (shape, re) for name, shape, re
+                 in self._factored_view_costs(input_name)}
+        sweep: set = set()
+        reeval: set = set()
+        for name in affected:
+            info = costs.get(name)
+            if info is None:
+                reeval.add(name)  # dense-rep views: no factored sweep
+                continue
+            shape, re_flops = info
+            if batched_strategy(shape, r, r, re_flops) == "stacked":
+                sweep.add(name)
+            else:
+                reeval.add(name)
+        if sweep:
+            bucket = batch_bucket(r)
+            Pb, Qb = pad_factors_to_rank(P, Q, bucket)
+            trig_targets = {up.view for up in
+                            self.compiled.triggers[input_name].updates}
+            maintained = {st.target.name for st in self.program.statements}
+            lazy = frozenset((maintained & trig_targets) - sweep)
+            fn = self._planned_trigger_fn(input_name, bucket,
+                                          frozenset(), lazy)
+            base = dict(self._tier_base[o])
+            out = fn(base, np.asarray(Pb), np.asarray(Qb))
+            for name in sweep:
+                self.views[name] = out[name]
+            self.stats.fold_sweeps += len(sweep)
+        if reeval:
+            self._fold_reeval(reeval)
+        return sweep | reeval
 
     def _build_trigger(self, trig) -> Callable:
         """Single-device jitted trigger, or the row-sharded distributed
@@ -247,6 +576,21 @@ class IncrementalEngine:
         if self._trigger_cache is None:
             self._trigger_cache = global_trigger_cache()
         self.plan = plan
+        # a plan with per-view depth assignments is authoritative for the
+        # deferred cascade: adopt (and re-resolve) its orders, settling
+        # any pending windows under the old depths first
+        plan_orders = {name: int(getattr(vp, "order", 1) or 1)
+                       for name, vp in plan.views.items()}
+        if any(o > 1 for o in plan_orders.values()):
+            if any(not vp.materialize for vp in plan.views.values()):
+                raise ValueError(
+                    "a plan assigning depth >= 2 must materialize every "
+                    "view: deferred folds sweep from window-start base "
+                    "snapshots, which lazy (recompute-on-read) views "
+                    "would leave inconsistent")
+            self._adopt_orders(plan_orders)
+        elif getattr(self, "_deferred", frozenset()):
+            self._adopt_orders({})  # re-plan back down to first order
         # planned firings leave the guard's fused fast path (their
         # per-view partitioning runs under the snapshot/rollback path);
         # getattr: set_plan also runs mid-__init__, before the guard
@@ -255,20 +599,52 @@ class IncrementalEngine:
         self._guard_fast_path = (
             guard is not None and guard.fused_path_ok
             and self.plan is None
-            and getattr(self, "flush_policy", None) != "cost")
+            and getattr(self, "flush_policy", None) != "cost"
+            and not getattr(self, "_deferred", frozenset()))
         if self.planner is not None and self.planner.plan is not plan:
             # keep the attached adaptive planner's baseline in sync so
             # its next drift check does not silently revert a hot-swap
             self.planner.adopt(plan)
 
+    def _adopt_orders(self, requested: Dict[str, int]) -> None:
+        """Hot-swap the per-view depth assignment (adaptive re-plans).
+
+        Pending windows are folded under the OLD depths first so no
+        accumulated update is lost, then the cascade state and the
+        trigger-cache namespace (which carries the order signature) are
+        rebuilt."""
+        eff = self._resolve_view_orders(requested)
+        if getattr(self, "_view_orders", None) == eff:
+            return
+        if getattr(self, "_tiers", ()) and getattr(self, "views", None) \
+                and self._cascade_pending():
+            self._fold(self._tiers[-1])
+        self._view_orders = eff
+        self._deferred = frozenset(n for n, o in eff.items() if o >= 2)
+        self._tiers = tuple(sorted({o for o in eff.values() if o >= 2}))
+        self._pending_input = {}
+        self._fold_prestacked = {}
+        self._tier_factors = {o: {} for o in self._tiers}
+        self._tier_firings = {o: 0 for o in self._tiers}
+        self._tier_base = {o: dict(getattr(self, "views", None) or {})
+                           for o in self._tiers}
+        self._cache_ns = None  # namespace embeds the order signature
+
     def _cache_key(self, tail: Tuple) -> Tuple:
         if self._cache_ns is None:
             from repro.plan import mesh_cache_key, program_fingerprint
+            # the namespace includes the compile-time delta depth and the
+            # per-view deferral signature: a depth-2 engine must never
+            # reuse (or poison) a first-order engine's compiled fns in a
+            # shared TriggerCache
+            order_sig = tuple(sorted(
+                (n, o) for n, o in self._view_orders.items() if o > 1))
             self._cache_ns = (
                 program_fingerprint(self.program, self.binding),
                 self._apply_backend, self._jit, self._donate,
                 self.compiled.force_rep, self.compiled.sequential_sm,
-                mesh_cache_key(self.mesh, self.mesh_axis))
+                mesh_cache_key(self.mesh, self.mesh_axis),
+                self.compiled.order, order_sig)
         return self._cache_ns + tail
 
     def _cached_build(self, tail: Tuple, builder: Callable) -> Callable:
@@ -328,8 +704,16 @@ class IncrementalEngine:
                 self._factored_view_costs(input_name)
                 if batched_strategy(shape, rank, rank, re) == "reeval")
             lazy = frozenset()
-        else:
+        elif not self._deferred:
             return frozenset(), frozenset()
+        else:
+            reeval, lazy = frozenset(), frozenset()
+        if self._deferred:
+            # deferred (depth >= 2) views are never swept per firing:
+            # they skip like lazy views and are refreshed by window
+            # folds instead of on-read recomputation
+            reeval = reeval - self._deferred
+            lazy = lazy | self._deferred
         targets = {up.view for up in self.compiled.triggers[input_name].updates}
         # keep the partition scoped to this trigger's targets, EXCEPT
         # that a lazy view left stale by an earlier firing (possibly of
@@ -422,7 +806,11 @@ class IncrementalEngine:
 
     def refresh(self, block: bool = False) -> Dict[str, Array]:
         """Recompute lazily-materialized views left stale by planned
-        firings (program order, so stale ancestors refresh first)."""
+        firings (program order, so stale ancestors refresh first).  On a
+        deferred-cascade engine this is a read point: any pending window
+        is folded first, so every deferred view is exact on return."""
+        if self._tiers and self._cascade_pending():
+            self._fold(self._tiers[-1])
         if not self._stale:
             return self.views
         for st in self.program.statements:
@@ -450,6 +838,7 @@ class IncrementalEngine:
                                      axis=self.mesh_axis)
         self._stale.clear()
         self._accum_rank.clear()
+        self._cascade_rebase_all()
         return dict(computed)
 
     # -- incremental path ------------------------------------------------------
@@ -463,6 +852,16 @@ class IncrementalEngine:
         (a chaos fault or non-finite output rolls back and returns the
         pre-firing views)."""
         rank = self.compiled.triggers[input_name].rank
+        if self._tiers and self._inputs_deferrable(input_name):
+            # deferred-input fast path: bank the factors and return —
+            # the fold materializes the input along with the views
+            self._cascade_accumulate(input_name, [(u, v)],
+                                     defer_input=True)
+            self.stats.updates_applied += 1
+            self.stats.triggers_fired += 1
+            if block:
+                jax.block_until_ready(self.views)
+            return self.views
         if self.chaos is not None:
             u, v = self.chaos.poison_update(u, v)
         if self.guard is not None:
@@ -479,7 +878,8 @@ class IncrementalEngine:
             except FiringAborted as e:
                 self.guard.on_abort(input_name, u, v, e.reason)
                 return self.views
-        elif self.plan is None and self.flush_policy != "cost":
+        elif self.plan is None and self.flush_policy != "cost" \
+                and not self._deferred:
             fn = self._trigger_fns[input_name]
             # np factors feed the jit directly — see _fire_inner
             if not self._jit:
@@ -489,6 +889,8 @@ class IncrementalEngine:
             self.views = fn(self.views, u, v)
         else:
             self._fire(input_name, rank, u, v)
+        if self._tiers:
+            self._cascade_accumulate(input_name, [(u, v)])
         if block:
             jax.block_until_ready(self.views)
             self.stats.trigger_seconds += time.perf_counter() - t0
@@ -522,6 +924,19 @@ class IncrementalEngine:
         if self.chaos is not None:
             updates = [self.chaos.poison_update(u, v) for u, v in updates]
         if not updates:
+            return self.views
+        if self._tiers and self._inputs_deferrable(input_name):
+            # deferred-input fast path: every maintained target of this
+            # trigger is folded from the window anyway, so the firing
+            # banks its raw factors and does no stacking, padding, or
+            # device dispatch at all; flush()/output() (and any due
+            # fold) first materialize the pending input state
+            self._cascade_accumulate(input_name, updates, defer_input=True)
+            self.stats.updates_applied += len(updates)
+            self.stats.triggers_fired += 1
+            self.stats.batches_applied += 1
+            if block:
+                jax.block_until_ready(self.views)
             return self.views
         t0 = time.perf_counter()  # before admission+stacking: host-side
         # concat (and any device sync from jax-array factors) is part of
@@ -559,6 +974,8 @@ class IncrementalEngine:
                 return self.views
         else:
             self._fire(input_name, bucket, P, Q)
+        if self._tiers:
+            self._cascade_accumulate(input_name, [(P0, Q0)])
         if block:
             jax.block_until_ready(self.views)
             self.stats.trigger_seconds += time.perf_counter() - t0
@@ -716,7 +1133,7 @@ class IncrementalEngine:
                 self.apply_updates(name, q, block=block)
             self._pending.pop(name, None)
             self._pending_since.pop(name, None)
-        if self._stale:
+        if self._stale or (self._tiers and self._cascade_pending()):
             self.refresh(block=block)
         return self.views
 
@@ -724,6 +1141,7 @@ class IncrementalEngine:
     def reevaluate(self, block: bool = False) -> Dict[str, Array]:
         """The paper's re-evaluation strategy: recompute from the current
         inputs (which the triggers have been keeping up to date)."""
+        self._apply_pending_inputs()  # deferred-input engines: make current
         inputs = {k: self.views[k] for k in self.program.inputs}
         t0 = time.perf_counter()
         computed = self._evaluator(inputs)
@@ -734,12 +1152,17 @@ class IncrementalEngine:
         self.views.update(computed)
         self._stale.clear()
         self._accum_rank.clear()
+        self._cascade_rebase_all()  # windows are void: every view is current
         self.stats.reevals += 1
         return dict(computed)
 
     # -- introspection -----------------------------------------------------------
     def output(self, name: Optional[str] = None) -> Array:
-        if self._stale:
+        self.stats.reads += 1
+        if self.planner is not None and \
+                hasattr(self.planner, "observe_read"):
+            self.planner.observe_read()
+        if self._stale or (self._tiers and self._cascade_pending()):
             self.refresh()
         name = name or self.program.output_names()[0]
         return self.views[name]
@@ -747,6 +1170,51 @@ class IncrementalEngine:
     def trigger_flops(self, input_name: str) -> float:
         return trigger_flops(self.compiled.triggers[input_name], self.program,
                              self.binding)
+
+    # -- materialized Δᵈ views (symbolic hierarchy) ----------------------------
+    def delta_trigger_fn(self, input_name: str, depth: int,
+                         rank: Optional[int] = None) -> Callable:
+        """Jitted trigger maintaining the ``__d{depth}__V`` views.
+
+        The shared-cache key carries the depth explicitly (plus the
+        engine namespace's order signature) — the latent collision this
+        fixes: the old tails ``("base", input, rank)`` would have let a
+        depth-2 trigger silently reuse a first-order compiled fn."""
+        if rank is None:
+            rank = self.compiled.triggers[input_name].rank
+        bucket = batch_bucket(rank)
+        if depth == 1:
+            return self._batched_trigger_fn(input_name, bucket)
+        key = (input_name, depth, bucket)
+        fn = self._delta_fns.get(key)
+        if fn is None:
+            fn = self._cached_build(
+                ("delta", input_name, depth, bucket),
+                lambda: self._build_trigger(compile_delta_trigger(
+                    self.compiled, input_name, depth, bucket)))
+            self._delta_fns[key] = fn
+        return fn
+
+    def materialize_delta_views(self, input_name: str, depth: int,
+                                rank: Optional[int] = None
+                                ) -> Tuple[str, ...]:
+        """Zero-initialize the ΔᵈV auxiliary views the depth-``depth``
+        trigger for ``input_name`` maintains; returns their names."""
+        from .cost import shape_of
+        if rank is None:
+            rank = self.compiled.triggers[input_name].rank
+        trig = compile_delta_trigger(self.compiled, input_name, depth,
+                                     batch_bucket(rank))
+        by_name = {st.target.name: st.target
+                   for st in self.program.statements}
+        names = []
+        for up in trig.updates:
+            base = up.view.split("__", 2)[-1]
+            n, m = shape_of(by_name[base], self.binding)
+            self.views.setdefault(up.view,
+                                  jnp.zeros((n, m), dtype=jnp.float32))
+            names.append(up.view)
+        return tuple(names)
 
     def reeval_flops(self) -> float:
         from .cost import expr_cost

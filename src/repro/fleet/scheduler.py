@@ -99,8 +99,9 @@ class FleetScheduler:
         self.chaos = as_monkey(self.config.chaos)
         # firing_cost_flops walks the trigger IR; priority calls it for
         # every claimable tenant on every claim, so memoize per
-        # (tenant, input, rank) — pure in the program structure
-        self._cost_memo: Dict[Tuple[str, str, int], float] = {}
+        # (tenant, input, rank, order-signature) — pure in the program
+        # structure and the engine's resolved view depths
+        self._cost_memo: Dict[Tuple[str, str, int, tuple], float] = {}
         self._any_degraded = False  # lets _apply_tier skip the scan
         # aggregate pending/capacity, maintained at append/prune time —
         # load() sits on every submit, so it must not scan the registry
@@ -226,17 +227,26 @@ class FleetScheduler:
     def priority(self, tenant: Tenant) -> float:
         """``spec.priority × SLO-pressure / firing cost`` — cheap overdue
         work first.  Overdue tenants (pressure ≥ 1) are boosted above
-        every on-time tenant regardless of cost."""
+        every on-time tenant regardless of cost.  Higher-order tenants
+        (deferred-cascade views) are priced at their amortized fold
+        share, not a full per-firing sweep — otherwise depth-k tenants
+        would look exactly ``fold_window**(k-1)``× more expensive than
+        they are and starve behind first-order neighbors."""
         pressure = tenant.slo_pressure()
         cost = 1.0
         eng = tenant.engine
+        orders = {n: o
+                  for n, o in (getattr(eng, "_view_orders", None) or
+                               {}).items() if o > 1} or None
+        order_sig = (tuple(sorted(orders.items())) if orders else ())
         for input_name, rank in self._pending_ranks(tenant).items():
             rank = min(rank, tenant.spec.max_claim_rank)
-            key = (tenant.spec.tenant_id, input_name, rank)
+            key = (tenant.spec.tenant_id, input_name, rank, order_sig)
             c = self._cost_memo.get(key)
             if c is None:
                 c = firing_cost_flops(eng.compiled, eng.binding,
-                                      input_name, rank)
+                                      input_name, rank,
+                                      view_orders=orders)
                 self._cost_memo[key] = c
             cost += c
         score = tenant.spec.priority * max(pressure, 1e-6) / cost

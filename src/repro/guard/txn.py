@@ -47,14 +47,19 @@ class FiringSnapshot:
     accum_rank: Dict[str, int]
     stale: Set[str]
     stats: object  # copied EngineStats dataclass
+    # deferred-cascade window state (higher-order engines): pending
+    # window factors, window-start base snapshots, firing counters
+    cascade: Optional[tuple] = None
 
 
 def take_snapshot(engine) -> FiringSnapshot:
     """Pre-firing snapshot: O(#views) pointer copies, no device work."""
+    cascade_fn = getattr(engine, "_cascade_snapshot", None)
     return FiringSnapshot(views=dict(engine.views),
                           accum_rank=dict(engine._accum_rank),
                           stale=set(engine._stale),
-                          stats=dataclasses.replace(engine.stats))
+                          stats=dataclasses.replace(engine.stats),
+                          cascade=cascade_fn() if cascade_fn else None)
 
 
 def restore_snapshot(engine, snap: FiringSnapshot) -> None:
@@ -65,6 +70,8 @@ def restore_snapshot(engine, snap: FiringSnapshot) -> None:
     engine._stale = snap.stale
     for f in dataclasses.fields(type(engine.stats)):
         setattr(engine.stats, f.name, getattr(snap.stats, f.name))
+    if snap.cascade is not None:
+        engine._cascade_restore(snap.cascade)
 
 
 def changed_views(snap: FiringSnapshot,

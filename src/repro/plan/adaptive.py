@@ -42,6 +42,8 @@ class AdaptivePlanner:
         self.drift_tol = drift_tol
         self._ranks: Deque[int] = deque(maxlen=history)
         self._batches: Deque[int] = deque(maxlen=history)
+        self._firings = 0
+        self._reads = 0
         self._since_replan = 0
         self._force_replan = False
         self.replans = 0
@@ -95,20 +97,38 @@ class AdaptivePlanner:
         """Record one firing (pre-padding stacked rank, T updates)."""
         self._ranks.append(max(1, int(stacked_rank)))
         self._batches.append(max(1, int(batch_size)))
+        self._firings += 1
         self._since_replan += 1
+
+    def observe_read(self) -> None:
+        """Record one view read (engine ``output()``).  The observed
+        reads-per-firing ratio is what makes depth pay: a stream of
+        updates between sparse reads is exactly the window a deferred
+        order-k cascade amortizes, so the fit feeds
+        ``WorkloadDescriptor.reads_per_firing`` when ``max_order ≥ 2``.
+        """
+        self._reads += 1
 
     def observed_workload(self) -> Optional[WorkloadDescriptor]:
         """The empirical descriptor: median/p10/p90 of observed stacked
         ranks, with the median batch size factored out so the fitted
-        (update_rank, batch_size) keep their declared meanings."""
+        (update_rank, batch_size) keep their declared meanings.  When
+        the declared workload opts into depth (``max_order ≥ 2``) the
+        fit also includes the observed reads-per-firing ratio — the
+        signal :func:`repro.plan.planner.plan_program` prices depth-k
+        maintenance against."""
         if not self._ranks:
             return None
         ranks, batches = sorted(self._ranks), sorted(self._batches)
         q = lambda xs, p: xs[min(len(xs) - 1, int(p * len(xs)))]
         t = max(1, q(batches, 0.5))
         k = max(1, round(q(ranks, 0.5) / t))
-        return replace(self.workload, update_rank=k, batch_size=t,
-                       rank_lo=q(ranks, 0.1), rank_hi=q(ranks, 0.9))
+        fitted = replace(self.workload, update_rank=k, batch_size=t,
+                         rank_lo=q(ranks, 0.1), rank_hi=q(ranks, 0.9))
+        if self.workload.max_order >= 2 and self._firings > 0:
+            fitted = replace(fitted,
+                             reads_per_firing=self._reads / self._firings)
+        return fitted
 
     # -- external signals (guard / stats) ------------------------------------
     def note_drift(self, names) -> None:

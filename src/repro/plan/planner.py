@@ -99,6 +99,13 @@ class WorkloadDescriptor:
     op_cost_scales: Optional[Dict[str, float]] = None
     mesh_shape: Optional[Tuple[int, ...]] = None
     mesh_axes: Optional[Tuple[str, ...]] = None
+    # higher-order (deferred-cascade) capability: max depth plan_program
+    # may assign per view (1 = classic first order, no depth pricing),
+    # the engine's fold window base, and the stacked-window rank cap —
+    # the extra-state/QR-recompression side of the depth trade-off
+    max_order: int = 1
+    fold_window: int = 8
+    max_fold_rank: int = 64
 
     def effective_reeval_flops(self, kinds: Dict[str, float]) -> float:
         """Σ kind_flops × kind_scale — FLOPs in matmul-equivalents."""
@@ -143,10 +150,17 @@ class ViewPlan:
     materialize: bool = True            # False → lazy (recompute on read)
     crossover_rank: int = 0             # §7 crossover (diagnostic)
     reeval_flops: float = 0.0           # view re-evaluation cost (diagnostic)
+    # delta depth: 1 = per-firing maintenance (strategy above applies);
+    # o >= 2 = deferred cascade — the engine folds this view's update
+    # window every fold_window**(o-1) firings (or at the next read)
+    # instead of sweeping per firing
+    order: int = 1
 
     def __post_init__(self):
         if self.strategy not in STRATEGIES:
             raise ValueError(f"unknown strategy {self.strategy!r}")
+        if self.order < 1:
+            raise ValueError(f"order must be >= 1, got {self.order}")
 
 
 @dataclass(frozen=True)
@@ -178,6 +192,11 @@ class MaintenancePlan:
         """
         reeval, lazy = set(), set()
         for name, vp in self.views.items():
+            if vp.order >= 2:
+                # deferred views are the engine's business: neither swept,
+                # re-evaluated, nor lazy-skipped per firing — their window
+                # folds on the engine's cascade schedule
+                continue
             if not vp.materialize:
                 lazy.add(name)
                 continue
@@ -284,6 +303,19 @@ def plan_program(compiled, workload: WorkloadDescriptor, *,
     apply cost beats ``reads_per_firing ×`` its recompute cost —
     otherwise it goes lazy (skipped during firings, recomputed on
     read).
+
+    Depth (``workload.max_order >= 2`` only): each view is additionally
+    priced at depths 2..max_order.  At depth ``o`` the engine folds a
+    window of ``w = fold_window**(o-1)`` firings into one stacked sweep
+    (capped at ``max_fold_rank`` by re-compression) — but a read forces
+    the fold early, so the *effective* window is
+    ``min(w, 1/reads_per_firing)``.  The smallest depth whose amortized
+    per-firing fold cost beats the best depth-1 cost by >= 2x is
+    assigned (inputs and trigger-read views stay first-order, and
+    producer depths are clamped to their consumers' so no trigger ever
+    reads a stale deferred view).  Any plan with a depth >= 2 view
+    materializes every view — fold bases and lazy recomputation do not
+    mix.
     """
     if isinstance(compiled, Program):
         compiled = compile_program(compiled)
@@ -319,13 +351,19 @@ def plan_program(compiled, workload: WorkloadDescriptor, *,
             maintain = 2.0 * k * n * m                 # per-firing sweep
             on_demand = workload.reads_per_firing * reeval_eff
             materialize = maintain <= on_demand
+        # every statement view is depth-eligible; _resolve_depths then
+        # clamps producers to their consumers' depth so per-firing delta
+        # chains never read a stale deferred view
+        order = _price_depth(workload, shape, reeval_eff)
         shapes[name], reeval_effs[name] = shape, reeval_eff
         views[name] = ViewPlan(view=name, strategy=strat,
                                threshold_rank=thr, materialize=materialize,
-                               crossover_rank=kstar, reeval_flops=reeval)
+                               crossover_rank=kstar, reeval_flops=reeval,
+                               order=order)
     if workload.chain_aware:
         _reprice_with_chain(compiled, binding, workload, lo, hi,
                             views, shapes, reeval_effs)
+    _resolve_depths(program, views)
 
     from .trigger_cache import mesh_cache_key
     wl = workload
@@ -336,6 +374,66 @@ def plan_program(compiled, workload: WorkloadDescriptor, *,
         fingerprint=program_fingerprint(program, binding),
         workload=wl, views=views,
         mesh_key=mesh_cache_key(mesh, mesh_axis))
+
+
+def _price_depth(workload: WorkloadDescriptor, shape: Tuple[int, int],
+                 reeval_eff: float) -> int:
+    """Smallest depth whose amortized fold cost beats the best depth-1
+    per-firing cost by >= 2x (1 when none does, or max_order is 1).
+
+    Depth-1 per-firing cost: min(sweep, re-evaluate).  Depth-o: one fold
+    every ``w_eff`` firings — a stacked sweep at the window rank (capped
+    by re-compression) or a re-evaluation, whichever wins — where
+    ``w_eff = min(fold_window**(o-1), 1/reads_per_firing)`` because a
+    read forces the fold early.  With reads on every firing (the default
+    descriptor) w_eff is 1 and no depth is ever assigned: depth buys
+    nothing without read sparsity, exactly the memory-vs-work trade-off
+    docs/higher_order.md plots.
+    """
+    if workload.max_order < 2:
+        return 1
+    n, m = shape
+    k = workload.expected_rank()
+    scale = max(workload.cost_scale, 1e-12)
+    rho = max(float(workload.reads_per_firing), 0.0)
+    best_order = 1
+    best = min(scale * 2.0 * k * n * m, reeval_eff)
+    for o in range(2, int(workload.max_order) + 1):
+        w = float(max(1, workload.fold_window) ** (o - 1))
+        w_eff = max(1.0, min(w, (1.0 / rho) if rho > 0 else w))
+        kw = float(k) * w_eff
+        if workload.max_fold_rank:
+            kw = min(kw, float(workload.max_fold_rank))
+        fold_cost = min(scale * 2.0 * kw * n * m, reeval_eff)
+        amortized = fold_cost / w_eff
+        if amortized * 2.0 <= best:
+            best_order, best = o, amortized
+    return best_order
+
+
+def _resolve_depths(program: Program, views: Dict[str, ViewPlan]) -> None:
+    """Clamp each view's depth to its consumers' (reverse program order)
+    and, if any depth >= 2 survives, force every view materialized —
+    the engine's deferred cascade refuses lazy/deferred mixing."""
+    names = {st.target.name for st in program.statements}
+    consumers: Dict[str, List[str]] = {}
+    for st in program.statements:
+        for v in st.expr.free_vars():
+            if v in names and v != st.target.name:
+                consumers.setdefault(v, []).append(st.target.name)
+    eff: Dict[str, int] = {}
+    for st in reversed(program.statements):
+        name = st.target.name
+        o = views[name].order
+        for c in consumers.get(name, ()):
+            o = min(o, eff[c])
+        eff[name] = o
+    deferred = any(o >= 2 for o in eff.values())
+    for name, vp in views.items():
+        o = eff.get(name, 1)
+        if o != vp.order or (deferred and not vp.materialize):
+            views[name] = replace(vp, order=o,
+                                  materialize=vp.materialize or deferred)
 
 
 def trigger_chain_costs(trig, binding: Dict[str, int]
@@ -423,7 +521,8 @@ def _reprice_with_chain(compiled: CompiledProgram, binding, workload,
 def firing_cost_flops(compiled: CompiledProgram, binding: Dict[str, int],
                       input_name: str, stacked_rank: int, *,
                       reeval_views: FrozenSet[str] = frozenset(),
-                      workload: Optional[WorkloadDescriptor] = None
+                      workload: Optional[WorkloadDescriptor] = None,
+                      view_orders: Optional[Dict[str, int]] = None
                       ) -> float:
     """Planner-estimated FLOPs of one trigger firing at ``stacked_rank``.
 
@@ -436,16 +535,38 @@ def firing_cost_flops(compiled: CompiledProgram, binding: Dict[str, int],
     the fleet scheduler multiplies into its SLO priority, and the place
     the chain a lone incremental view keeps alive must not be
     underestimated (ROADMAP carried follow-up).
+
+    ``view_orders`` (an engine's resolved per-view delta depths) prices
+    a deferred order-``o`` view at its amortized fold share — one
+    stacked, rank-capped sweep per ``fold_window**(o-1)`` firings,
+    never worse than re-evaluation — instead of a full per-firing
+    sweep, and keeps none of the delta chain alive per firing.
+    Chain-aware fleet pricing would otherwise overcharge higher-order
+    tenants by exactly the factor their depth buys back.
     """
     trig = compiled.triggers[input_name]
     assign_flops, view_deps = trigger_chain_costs(trig, binding)
     scale = workload.cost_scale if workload is not None else 1.0
+    fold_window = workload.fold_window if workload is not None else 8
+    max_fold_rank = workload.max_fold_rank if workload is not None else 64
     k = max(1, int(stacked_rank))
     by_name = {s.target.name: s for s in compiled.program.statements}
     total = 0.0
     live_assigns: set = set()
     for up in trig.updates:
         st = by_name.get(up.view)
+        order = (view_orders or {}).get(up.view, 1)
+        if order >= 2 and st is not None:
+            w = float(max(1, fold_window) ** (order - 1))
+            kw = k * w
+            if max_fold_rank:
+                kw = min(kw, float(max_fold_rank))
+            n, m = shape_of(st.target, binding)
+            kinds = expr_cost_kinds(st.expr, binding)
+            re_eff = (workload.effective_reeval_flops(kinds)
+                      if workload is not None else sum(kinds.values()))
+            total += min(scale * 2.0 * kw * n * m, re_eff) / w
+            continue
         if up.view in reeval_views and st is not None:
             kinds = expr_cost_kinds(st.expr, binding)
             total += (workload.effective_reeval_flops(kinds)
@@ -479,7 +600,7 @@ def static_plan(engine, strategy: str,
     """
     base = plan_for_engine(engine, workload or WorkloadDescriptor())
     views = {name: replace(vp, strategy=strategy, threshold_rank=None,
-                           materialize=True)
+                           materialize=True, order=1)
              for name, vp in base.views.items()}
     return MaintenancePlan(fingerprint=base.fingerprint,
                            workload=base.workload, views=views,

@@ -157,3 +157,132 @@ def test_aux_view_extraction():
     from repro.core import expr as ex
     aux_st = next(s for s in p2.statements if s.target.name.startswith("__aux"))
     assert isinstance(aux_st.expr, ex.Inverse)
+
+# ---------------------------------------------------------------------------
+# higher-order deltas (delta-of-delta, DBToaster arXiv 1207.0137)
+# ---------------------------------------------------------------------------
+
+
+def _step(env, times=1):
+    """env with A and B advanced ``times`` identical (diagonal) steps."""
+    out = dict(env)
+    out["A"] = env["A"] + times * (env["dU_A"] @ env["dV_A"].T)
+    out["B"] = env["B"] + times * (env["dU_B"] @ env["dV_B"].T)
+    return out
+
+
+def test_second_order_matmul_diagonal(setting):
+    """Diagonal Δ²: Δ²E(·; d, d) = E(+2d) − 2·E(+d) + E for E = A·B."""
+    A, B, env, denv = setting
+    e = matmul(A, B)
+    sym = _delta_value(derive(e, denv, order=2), env, {})
+    E = lambda en: evaluate(e, en, {})
+    want = E(_step(env, 2)) - 2 * E(_step(env, 1)) + E(env)
+    assert_close(sym, want, rtol=5e-3, atol=1e-2)
+
+
+def test_second_order_square_is_2dd(setting):
+    """Δ²(A²; d, d) = 2·d·d exactly — no base-view reads left at depth 2."""
+    A, B, env, denv = setting
+    d2 = derive(matmul(A, A), denv, order=2)
+    assert isinstance(d2, LowRank)
+    d = env["dU_A"] @ env["dV_A"].T
+    assert_close(_delta_value(d2, env, {}), 2 * d @ d, rtol=5e-3, atol=1e-2)
+    # ...and none of its factor blocks reads A itself
+    for blk in d2.left + d2.right:
+        assert "A" not in blk.free_vars()
+
+
+def test_second_order_distinct_steps(setting):
+    """Mixed-update Δ² via ``steps``: Δ_{d₂}Δ_{d₁}E =
+    E(+d₁+d₂) − E(+d₁) − E(+d₂) + E."""
+    A, B, env, denv = setting
+    env = dict(env)
+    rng = np.random.default_rng(5)
+    env["dU2_A"] = jnp.asarray(rng.normal(size=(N, 1)) * 0.3, jnp.float32)
+    env["dV2_A"] = jnp.asarray(rng.normal(size=(N, 1)) * 0.3, jnp.float32)
+    denv2 = DeltaEnv()
+    denv2.deltas["A"] = LowRank.outer(var("dU2_A", (N, 1)),
+                                      var("dV2_A", (N, 1)))
+    e = matmul(A, A)
+    sym = _delta_value(derive(e, denv, order=2, steps=[denv2]), env, {})
+    d1 = env["dU_A"] @ env["dV_A"].T
+    d2 = env["dU2_A"] @ env["dV2_A"].T
+    E = lambda a: np.asarray(a) @ np.asarray(a)
+    a = np.asarray(env["A"])
+    want = E(a + d1 + d2) - E(a + d1) - E(a + d2) + E(a)
+    assert_close(sym, want, rtol=5e-3, atol=1e-2)
+
+
+def test_third_order_vanishes_on_quadratic(setting):
+    """DBToaster termination: Δ³ ≡ 0 for any degree-2 expression."""
+    A, B, env, denv = setting
+    assert derive(matmul(A, B), denv, order=3).is_zero()
+    assert derive(matmul(A, A), denv, order=3).is_zero()
+    assert derive(add(matmul(A, B), scale(2.0, A)), denv, order=3).is_zero()
+
+
+def test_third_order_cubic_diagonal(setting):
+    """Δ³(A³; d, d, d) equals the numeric third difference (= 6·d³)."""
+    A, B, env, denv = setting
+    e = matmul(matmul(A, A), A)
+    sym = _delta_value(derive(e, denv, order=3), env, {})
+    E = lambda en: evaluate(e, en, {})
+    want = (E(_step(env, 3)) - 3 * E(_step(env, 2))
+            + 3 * E(_step(env, 1)) - E(env))
+    assert_close(sym, want, rtol=5e-3, atol=5e-2)
+    d = np.asarray(env["dU_A"] @ env["dV_A"].T, np.float64)
+    assert_close(sym, 6 * d @ d @ d, rtol=5e-3, atol=5e-2)
+
+
+def test_higher_order_scale_rule(setting):
+    A, B, env, denv = setting
+    e = scale(2.5, matmul(A, A))
+    sym = _delta_value(derive(e, denv, order=2), env, {})
+    E = lambda en: evaluate(e, en, {})
+    want = E(_step(env, 2)) - 2 * E(_step(env, 1)) + E(env)
+    assert_close(sym, want, rtol=5e-3, atol=1e-2)
+
+
+def test_order_zero_and_one_match_classic(setting):
+    """Regression pin: order ≤ 1 is bit-identical to the pre-existing
+    first-order ``derive`` (same rep class, same rank, same blocks)."""
+    A, B, env, denv = setting
+    e = matmul(A, B)
+    classic = derive(e, denv)
+    for o in (0, 1):
+        d = derive(e, denv, order=o)
+        assert type(d) is type(classic)
+        assert d.rank == classic.rank
+        np.testing.assert_array_equal(
+            np.asarray(_delta_value(d, env, {})),
+            np.asarray(_delta_value(classic, env, {})))
+
+
+def test_second_order_through_inverse_raises(setting):
+    """The Woodbury rule stops at first order: Δ² through a materialized
+    inverse raises instead of silently producing a wrong rep."""
+    A, B, env, denv = setting
+    from repro.core import IncrementalInverseError
+    Z = var("Z", (N, N))
+    Zexpr = inverse(Z)
+    denv2 = DeltaEnv()
+    denv2.deltas["Z"] = LowRank.outer(var("dU_A", (N, 2)),
+                                      var("dV_A", (N, 2)))
+    denv2.views[id(Zexpr)] = var("W", (N, N))
+    d1 = derive(Zexpr, denv2)
+    assert isinstance(d1, LowRank)  # depth 1 still fine
+    # the compiler registers the view's own first-order delta before
+    # recursing (W moves when Z does); with it in scope, the Woodbury
+    # rep's block operands are no longer static and depth 2 must refuse
+    denv2.deltas["W"] = d1
+    with pytest.raises(IncrementalInverseError):
+        derive(Zexpr, denv2, order=2)
+
+
+def test_derive_order_validation(setting):
+    A, B, env, denv = setting
+    with pytest.raises(ValueError):
+        derive(matmul(A, B), denv, order=-1)
+    with pytest.raises(ValueError):
+        derive(matmul(A, B), denv, order=3, steps=[denv])  # needs 2 envs

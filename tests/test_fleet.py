@@ -783,3 +783,106 @@ def test_breaker_abandoned_probe_rearms():
     assert not br.allow()                  # … and in flight
     vc.advance(2.0)                        # prober crashed; window re-arms
     assert br.allow()
+
+# ---------------------------------------------------------------------------
+# higher-order (deferred-cascade) tenants under fleet chaos (ISSUE 8)
+# ---------------------------------------------------------------------------
+
+def _replay_with_opts(tenant, inputs, updates_by_lsn):
+    """Isolated replay honoring the tenant's engine_opts (order,
+    fold_window, …) — a deferred tenant must be replayed by a deferred
+    engine for bit-identity to be achievable."""
+    ref = IncrementalEngine(tenant.spec.program, tenant.spec.update_ranks,
+                            guard=tenant.spec.guarded or None,
+                            **tenant.spec.engine_opts)
+    ref.initialize(inputs)
+    for input_name, lsns in tenant.commit_log:
+        assert input_name != "<reeval>", "differential test must not degrade"
+        ref.apply_updates(input_name,
+                          [updates_by_lsn[l] for l in lsns])
+    return ref
+
+
+@pytest.mark.parametrize("seed", CHAOS_SEEDS)
+def test_fleet_higher_order_chaos_bit_identical_and_exact(seed):
+    """ISSUE 8 differential: a 5-tenant fleet in which two tenants run
+    order-2 deferred engines (``TenantSpec.engine_opts``) under worker
+    crashes, lease expiry, and poison.  Invariants: exactly-once
+    commit accounting; committed stores bit-identical to same-order
+    isolated replays (aborted/replayed firings never tick a cascade
+    window twice); and, after a fold barrier, numeric agreement with a
+    clean FIRST-order replay of the same committed groups."""
+    vc = VClock()
+    fleet = FleetScheduler(
+        FleetConfig(lease_ttl=1.0,
+                    chaos=ChaosConfig(seed=seed, worker_crash_p=0.15,
+                                      lease_expiry_p=0.1, poison_p=0.02)),
+        clock=vc, sleep=vc.sleep)
+    from repro.apps.matrix_powers import build_powers_program
+    shapes, tenant_inputs = {}, {}
+    rng0 = np.random.default_rng(99)
+    for i in range(3):   # two deferred tenants + one first-order control
+        tid = f"pow{i}"
+        prog = build_powers_program(k=4, n=10, model="exp")
+        a = rng0.standard_normal((10, 10)).astype(np.float32)
+        a *= 0.5 / max(abs(np.linalg.eigvals(a)))
+        opts = {"order": 2, "fold_window": 2} if i < 2 else {}
+        fleet.add_tenant(TenantSpec(tid, prog, {"A": 1}, max_claim_rank=4,
+                                    engine_opts=opts), {"A": a})
+        shapes[tid] = ("A", (10, 10))
+        tenant_inputs[tid] = {"A": a}
+    for i, (m, d, p) in enumerate([(8, 4, 5), (6, 3, 4)]):
+        tid = f"logit{i}"
+        prog, inputs = _logit_tenant(m, d, p, seed=i)
+        fleet.add_tenant(TenantSpec(tid, prog, {"W": 1},
+                                    max_claim_rank=4), inputs)
+        shapes[tid] = ("W", (p, d))
+        tenant_inputs[tid] = inputs
+    assert fleet.registry.get("pow0").engine._deferred
+    assert not fleet.registry.get("pow2").engine._deferred
+
+    tids = sorted(shapes)
+    rng = np.random.default_rng(seed + 5)
+    by_lsn = {tid: {} for tid in tids}
+    admitted = {tid: 0 for tid in tids}
+    for step in range(150):
+        tid = tids[int(rng.integers(len(tids)))]
+        input_name, (n, m) = shapes[tid]
+        u, v = _rank1(rng, n, m, scale=0.02)
+        if fleet.submit(tid, input_name, u, v) == ADMITTED:
+            admitted[tid] += 1
+            entry = fleet.registry.get(tid).log.pending(0)[-1]
+            by_lsn[tid][entry.lsn] = (entry.u, entry.v)
+        vc.advance(0.01)
+        if step % 25 == 24:
+            fleet.run_until_idle(workers=3,
+                                 on_stall=lambda: vc.advance(1.1))
+    fleet.run_until_idle(workers=3, on_stall=lambda: vc.advance(1.1))
+    assert fleet.chaos.worker_crashes + fleet.chaos.lease_expiries > 0
+
+    for tid in tids:
+        tenant = fleet.registry.get(tid)
+        assert not tenant.dirty()
+        assert tenant.stats.committed_updates == admitted[tid], tid
+        ref = _replay_with_opts(tenant, tenant_inputs[tid], by_lsn[tid])
+        assert max_abs_diff(tenant.committed_views, ref.views) == 0.0, tid
+        # fold barrier, then the first-order differential.  5e-6
+        # scale-normalized: two float32 maintenance paths (per-firing
+        # sweeps vs window folds) drift apart by a few ulps per firing.
+        views = dict(tenant.engine.flush())
+        first = IncrementalEngine(tenant.spec.program,
+                                  tenant.spec.update_ranks,
+                                  guard=tenant.spec.guarded or None)
+        first.initialize(tenant_inputs[tid])
+        for input_name, lsns in tenant.commit_log:
+            first.apply_updates(input_name,
+                                [by_lsn[tid][l] for l in lsns])
+        for st in tenant.spec.program.statements:
+            name = st.target.name
+            want = np.asarray(first.views[name], np.float64)
+            got = np.asarray(views[name], np.float64)
+            err = np.abs(got - want).max() / max(np.abs(want).max(), 1.0)
+            assert err <= 5e-6, f"{tid}/{name}: {err:.2e}"
+    # deferred tenants actually exercised the cascade under chaos
+    assert fleet.registry.get("pow0").engine.stats.folds > 0 or \
+        fleet.registry.get("pow1").engine.stats.folds > 0

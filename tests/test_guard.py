@@ -626,3 +626,129 @@ def test_refit_through_engine_firing_path():
     assert eng.stats.reeval_flops_timed > 0
     scale = eng.planner.refit_from_stats(eng.stats)
     assert scale is not None and scale > 0
+
+# ---------------------------------------------------------------------------
+# higher-order (deferred-cascade) engines under guard (ISSUE 8)
+# ---------------------------------------------------------------------------
+
+
+def test_deferred_engine_never_takes_guard_fast_path():
+    """The fused-transaction fast path skips host-side snapshots; a
+    deferred cascade carries host window state, so it must stay off."""
+    prog = build_powers_program(k=4, n=12, model="exp")
+    eng = IncrementalEngine(prog, order=2, fold_window=2,
+                            guard=GuardConfig())
+    assert not eng._guard_fast_path
+    assert IncrementalEngine(prog, guard=GuardConfig())._guard_fast_path
+
+
+def test_higher_order_fault_rolls_back_cascade_bit_identically():
+    """An aborted firing on an order-2 engine must restore the views AND
+    the cascade window (factors, bases, counters) — a half-accumulated
+    window would silently double-apply at the next fold."""
+    prog = build_powers_program(k=4, n=12, model="exp")
+    rng = np.random.default_rng(2)
+    a = rng.standard_normal((12, 12)).astype(np.float32) * 0.2
+    eng = IncrementalEngine(prog, order=2, fold_window=4,
+                            guard=GuardConfig(),
+                            chaos=ChaosConfig(seed=0, trigger_raise_p=1.0))
+    eng.initialize({"A": a})
+    # seed the window with one admitted update (chaos counts firings
+    # before raising; probability 1.0 raises on every guarded attempt)
+    before_cascade = eng._cascade_snapshot()
+    before_views = dict(eng.views)
+    u = rng.standard_normal((12, 1)).astype(np.float32) * 0.01
+    v = rng.standard_normal((12, 1)).astype(np.float32) * 0.01
+    out = eng.apply_update("A", u, v)
+    for k, arr in before_views.items():
+        assert out[k] is arr, f"{k}: rollback must restore the same buffer"
+    factors, base, firings = eng._cascade_snapshot()
+    bf_factors, bf_base, bf_firings = before_cascade
+    assert firings == bf_firings
+    assert {o: {k: len(v) for k, v in fs.items()}
+            for o, fs in factors.items()} == \
+        {o: {k: len(v) for k, v in fs.items()}
+         for o, fs in bf_factors.items()}
+    assert eng.guard.stats.rollbacks == 1
+    assert eng.stats.folds == 0
+
+
+@pytest.mark.parametrize("seed", CHAOS_SEEDS)
+def test_fold_abort_refolds_exactly(seed):
+    """Chaos raised inside a fold rolls the fold back and re-folds via
+    the chaos-free exact path; the stream must end exact regardless."""
+    prog = build_powers_program(k=4, n=12, model="exp")
+    rng = np.random.default_rng(seed)
+    a = rng.standard_normal((12, 12)).astype(np.float32)
+    a *= 0.5 / max(abs(np.linalg.eigvals(a)))
+    chaos = ChaosConfig(seed=seed, trigger_raise_p=0.35)
+    eng = IncrementalEngine(prog, order=2, fold_window=2,
+                            guard=GuardConfig(), chaos=chaos)
+    eng.initialize({"A": a})
+    stream = UpdateStream(n=12, m=12, scale=0.01, seed=seed)
+    it = iter(stream)
+    for _ in range(30):
+        u, v = next(it)
+        eng.apply_update("A", u, v)
+    eng.flush()
+    assert eng.chaos.raises > 0, "chaos never fired — test is vacuous"
+    assert eng.stats.folds > 0
+    assert all(bool(jnp.isfinite(x).all()) for x in eng.views.values())
+    # the maintained inputs hold exactly the admitted updates, so
+    # re-evaluating from them is the exactness oracle
+    ref = _reference_views(eng)
+    for st in prog.statements:
+        name = st.target.name
+        r = np.asarray(ref[name], np.float64)
+        c = np.asarray(eng.views[name], np.float64)
+        err = np.abs(r - c).max() / max(np.abs(r).max(), 1.0)
+        assert err <= 1e-5, f"{name}: {err:.2e}"
+
+
+@pytest.mark.parametrize("seed", CHAOS_SEEDS)
+def test_higher_order_chaos_matches_first_order_replay(seed):
+    """Differential: an order-2 guarded engine under poison + trigger
+    chaos stays exactly-once — its final state matches an isolated
+    clean FIRST-order engine replaying only the admitted updates."""
+    prog = build_powers_program(k=4, n=16, model="exp")
+    rng = np.random.default_rng(seed)
+    a = rng.standard_normal((16, 16)).astype(np.float32)
+    a *= 0.5 / max(abs(np.linalg.eigvals(a)))
+    chaos = ChaosConfig(seed=seed, poison_p=0.05, poison_kind="nan",
+                        trigger_raise_p=0.05)
+    eng = IncrementalEngine(prog, order=2, fold_window=3,
+                            guard=GuardConfig(), chaos=chaos)
+    eng.initialize({"A": a})
+    stream = UpdateStream(n=16, m=16, scale=0.005, seed=seed)
+    it = iter(stream)
+    applied = []
+    n_updates = 60
+    for _ in range(n_updates):
+        u, v = next(it)
+        before = eng.guard.stats.admitted
+        aborted = eng.guard.stats.aborted_firings
+        eng.apply_update("A", u, v)
+        # "admitted" is admission control (validation passed); a chaos
+        # abort rolls an admitted firing back and drops it — committed
+        # means admitted AND not aborted
+        if (eng.guard.stats.admitted > before
+                and eng.guard.stats.aborted_firings == aborted):
+            applied.append((u, v))
+    eng.flush()
+    eng.guard.sync()
+    g = eng.guard.stats
+    assert eng.chaos.poisoned > 0, "chaos never fired — test is vacuous"
+    assert g.admitted + g.quarantined == n_updates  # exactly-once
+    assert len(applied) == g.admitted - g.aborted_firings
+    replay = IncrementalEngine(prog)  # clean, first-order
+    replay.initialize({"A": a})
+    for u, v in applied:
+        replay.apply_update("A", u, v)
+    for st in prog.statements:
+        name = st.target.name
+        r = np.asarray(replay.views[name], np.float64)
+        c = np.asarray(eng.views[name], np.float64)
+        err = np.abs(r - c).max() / max(np.abs(r).max(), 1.0)
+        assert err <= 1e-5, f"{name}: {err:.2e}"
+    np.testing.assert_array_equal(np.asarray(eng.views["A"]),
+                                  np.asarray(replay.views["A"]))
