@@ -1,0 +1,248 @@
+"""Sparse-delta carrier benchmark + smoke gates (``BENCH_sparse.json``).
+
+Three measurements on the left-chain program ``Y1 = X·W1; Y2 = Y1·W2``
+(both views row-local-closed), all CI-gated under ``--quick``
+(``sparse-containment`` job):
+
+  1. **Row-local containment** — a stream of `RowLocalCarrier` updates
+     touching ≤1% of the input's rows, fired through the row-local
+     carrier path, vs the *same* deltas widened to dense factors
+     through the ordinary rank-k sweep.  On CPU the carrier path runs
+     the compact in-place apply (``rowlocal_apply="auto"``): the factor
+     chain is evaluated on the ``(r, k)`` row block and each view's
+     touched rows are mutated in place, so the firing does ``O(r·(k+m))``
+     work while the dense path pays the full ``n·m`` sweep *plus* the
+     jit copy floor (XLA on CPU ignores buffer donation, so every
+     written view is rewritten per firing — see the one-time donation
+     warning and docs/sparse_deltas.md).  At 1% affected rows the
+     carrier path must be ≥5x cheaper per update or the whole carrier
+     thread is decorative.
+
+  2. **No-op short-circuit** — a stream that is ≥95% `NoOpCarrier`
+     (declared-zero deltas) vs the dense path fed the same stream as
+     explicit zero factor pairs (which it cannot prove are zero and
+     must fire).  Gates: ≥10x cheaper per update, and the engine's
+     ``noop_skips`` accounting must cover every declared no-op.
+
+  3. **Dense-path overhead** — raw ``(u, v)`` pairs through
+     ``apply_update`` (which now routes via the carrier dispatch) vs
+     the cached trigger fn invoked directly on the same arrays.  The
+     dispatch layer must cost <5% — the carrier refactor may not tax
+     users who never construct a carrier.
+
+``--quick`` shrinks sizes/rounds for the CI budget; gates are
+identical.  Ratio gates use the median of per-round ratios so a bursty
+shared-CPU neighbor cannot flip a pass.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+import time
+from typing import Dict
+
+import jax
+import numpy as np
+
+from repro.core import IncrementalEngine, NoOpCarrier, Program, dim, matmul
+from repro.data import row_local_stream
+
+
+def _chain_prog(n: int, m: int, k: int) -> Program:
+    p = Program(name="bench_chain")
+    X = p.input("X", (dim("N"), dim("M")))
+    W1 = p.input("W1", (dim("M"), dim("K")))
+    W2 = p.input("W2", (dim("K"), dim("K")))
+    Y1 = p.let("Y1", matmul(X, W1))
+    p.let("Y2", matmul(Y1, W2))
+    p.outputs = ["Y1", "Y2"]
+    return p.bind_dims(N=n, M=m, K=k)
+
+
+def _inputs(n: int, m: int, k: int, seed: int = 0) -> Dict[str, np.ndarray]:
+    rng = np.random.default_rng(seed)
+    return {"X": rng.standard_normal((n, m)).astype(np.float32),
+            "W1": rng.standard_normal((m, k)).astype(np.float32),
+            "W2": rng.standard_normal((k, k)).astype(np.float32)}
+
+
+def _engine(n: int, m: int, k: int, rank: int) -> IncrementalEngine:
+    eng = IncrementalEngine(_chain_prog(n, m, k), {"X": rank})
+    eng.initialize(_inputs(n, m, k))
+    return eng
+
+
+def _settle(eng: IncrementalEngine) -> None:
+    jax.block_until_ready(eng.views["Y2"])
+
+
+def _median_ratio(base_times, fast_times):
+    return float(np.median(np.asarray(base_times)
+                           / np.maximum(np.asarray(fast_times), 1e-12)))
+
+
+def rowlocal_run(quick: bool) -> Dict[str, float]:
+    n, m, k = (8192, 256, 256) if quick else (16384, 384, 256)
+    rank, rounds, per_round = 8, (5 if quick else 9), (4 if quick else 6)
+    rows_touched = max(1, n // 100)          # ≤1% affected rows
+    carrier_eng = _engine(n, m, k, rank)
+    dense_eng = _engine(n, m, k, rank)
+    # one stream, deltas drawn up-front: both paths see identical
+    # updates and the RNG never runs inside a timed region
+    stream = row_local_stream(n, rows_touched, m=m, rank=rank, seed=1)
+    draws = [stream.next_carrier() for _ in range(1 + rounds * per_round)]
+    # warm both jit paths
+    carrier_eng.apply_update("X", draws[0])
+    _settle(carrier_eng)
+    dense_eng.apply_update("X", *draws[0].factors())
+    _settle(dense_eng)
+    pairs = [c.factors() for c in draws]
+    t_slab, t_dense = [], []
+    for i in range(rounds):
+        batch = draws[1 + i * per_round: 1 + (i + 1) * per_round]
+        t0 = time.perf_counter()
+        for c in batch:
+            carrier_eng.apply_update("X", c)
+        _settle(carrier_eng)
+        t_slab.append((time.perf_counter() - t0) / per_round)
+        t0 = time.perf_counter()
+        for P, Q in pairs[1 + i * per_round: 1 + (i + 1) * per_round]:
+            dense_eng.apply_update("X", P, Q)
+        _settle(dense_eng)
+        t_dense.append((time.perf_counter() - t0) / per_round)
+    assert carrier_eng.stats.rowlocal_firings > 0
+    assert carrier_eng.stats.widened_carriers == 0
+    err = float(np.max(np.abs(np.asarray(carrier_eng.views["Y2"])
+                              - np.asarray(dense_eng.views["Y2"]))))
+    scale = float(np.abs(np.asarray(dense_eng.views["Y2"])).max())
+    return {"n": n, "m": m, "rows_touched": rows_touched,
+            "affected_fraction": rows_touched / n,
+            "us_rowlocal": float(np.median(t_slab)) * 1e6,
+            "us_dense": float(np.median(t_dense)) * 1e6,
+            "speedup": _median_ratio(t_dense, t_slab),
+            "rel_err": err / max(scale, 1.0)}
+
+
+def noop_run(quick: bool) -> Dict[str, float]:
+    n, m, k = (4096, 256, 128) if quick else (8192, 256, 256)
+    rank, total = 1, (100 if quick else 200)
+    live_every = 20                          # 5% live → 95% no-ops
+    carrier_eng = _engine(n, m, k, rank)
+    dense_eng = _engine(n, m, k, rank)
+    live = row_local_stream(n, 4, m=m, rank=rank, seed=2)
+    live_d = row_local_stream(n, 4, m=m, rank=rank, seed=2)
+    zero_u = np.zeros((n, rank), dtype=np.float32)
+    zero_v = np.zeros((m, rank), dtype=np.float32)
+    # warm
+    carrier_eng.apply_update("X", live.next_carrier())
+    _settle(carrier_eng)
+    dense_eng.apply_update("X", *live_d.next_carrier().factors())
+    _settle(dense_eng)
+    t0 = time.perf_counter()
+    for i in range(total):
+        if i % live_every == 0:
+            carrier_eng.apply_update("X", live.next_carrier())
+        else:
+            carrier_eng.apply_update("X", NoOpCarrier(n, m))
+    _settle(carrier_eng)
+    t_carrier = (time.perf_counter() - t0) / total
+    t0 = time.perf_counter()
+    for i in range(total):
+        if i % live_every == 0:
+            dense_eng.apply_update("X", *live_d.next_carrier().factors())
+        else:
+            # the dense path cannot prove a zero pair is a no-op
+            dense_eng.apply_update("X", zero_u, zero_v)
+    _settle(dense_eng)
+    t_dense = (time.perf_counter() - t0) / total
+    declared = total - (total + live_every - 1) // live_every
+    skip_frac = carrier_eng.stats.noop_skips / total
+    assert carrier_eng.stats.noop_skips == declared
+    err = float(np.max(np.abs(np.asarray(carrier_eng.views["Y2"])
+                              - np.asarray(dense_eng.views["Y2"]))))
+    scale = float(np.abs(np.asarray(dense_eng.views["Y2"])).max())
+    return {"n": n, "updates": total,
+            "us_carrier": t_carrier * 1e6, "us_dense": t_dense * 1e6,
+            "speedup": t_dense / max(t_carrier, 1e-12),
+            "noop_skip_fraction": skip_frac,
+            "rel_err": err / max(scale, 1.0)}
+
+
+def dense_overhead_run(quick: bool) -> Dict[str, float]:
+    n, m, k = (4096, 256, 128) if quick else (8192, 256, 256)
+    rank, rounds, per_round = 1, (7 if quick else 11), (8 if quick else 12)
+    eng = _engine(n, m, k, rank)
+    rng = np.random.default_rng(3)
+    mk = lambda: ((0.01 * rng.standard_normal((n, rank))).astype(np.float32),
+                  (0.01 * rng.standard_normal((m, rank))).astype(np.float32))
+    u, v = mk()
+    eng.apply_update("X", u, v)              # warm the dispatch path
+    _settle(eng)
+    trig_fn = eng._trigger_fns["X"]          # the staged dense trigger
+    eng.views = trig_fn(eng.views, u, v)
+    _settle(eng)
+    t_api, t_raw = [], []
+    for _ in range(rounds):
+        pairs = [mk() for _ in range(per_round)]
+        t0 = time.perf_counter()
+        for u, v in pairs:
+            eng.apply_update("X", u, v)
+        _settle(eng)
+        t_api.append((time.perf_counter() - t0) / per_round)
+        t0 = time.perf_counter()
+        for u, v in pairs:
+            eng.views = trig_fn(eng.views, u, v)
+        _settle(eng)
+        t_raw.append((time.perf_counter() - t0) / per_round)
+    overhead = _median_ratio(t_api, t_raw) - 1.0
+    return {"n": n, "us_api": float(np.median(t_api)) * 1e6,
+            "us_raw": float(np.median(t_raw)) * 1e6,
+            "overhead_frac": overhead}
+
+
+def main(quick: bool = False) -> int:
+    results: Dict[str, object] = {
+        "config": {"quick": quick, "backend": jax.default_backend()},
+        "rowlocal": rowlocal_run(quick),
+        "noop": noop_run(quick),
+        "dense_overhead": dense_overhead_run(quick),
+    }
+    with open("BENCH_sparse.json", "w") as f:
+        json.dump(results, f, indent=2)
+    rl = results["rowlocal"]
+    no = results["noop"]
+    ov = results["dense_overhead"]
+    print(f"wrote BENCH_sparse.json (row-local {rl['speedup']:.2f}x at "
+          f"{rl['affected_fraction']*100:.2f}% rows, no-op stream "
+          f"{no['speedup']:.2f}x with {no['noop_skip_fraction']*100:.0f}% "
+          f"skips, dense dispatch overhead {ov['overhead_frac']*100:.1f}%)")
+    ok = 0
+    if rl["speedup"] < 5.0:
+        print(f"FAIL: row-local speedup {rl['speedup']:.2f}x < 5x gate "
+              f"at {rl['affected_fraction']*100:.2f}% affected rows",
+              file=sys.stderr)
+        ok = 1
+    if rl["rel_err"] > 1e-3:
+        print(f"FAIL: row-local path diverged from dense "
+              f"(rel err {rl['rel_err']:.2e})", file=sys.stderr)
+        ok = 1
+    if no["speedup"] < 10.0:
+        print(f"FAIL: no-op stream speedup {no['speedup']:.2f}x < 10x "
+              f"gate", file=sys.stderr)
+        ok = 1
+    if no["noop_skip_fraction"] < 0.95:
+        print(f"FAIL: no-op skip fraction "
+              f"{no['noop_skip_fraction']*100:.0f}% < 95%",
+              file=sys.stderr)
+        ok = 1
+    if ov["overhead_frac"] >= 0.05:
+        print(f"FAIL: dense dispatch overhead "
+              f"{ov['overhead_frac']*100:.1f}% >= 5% budget",
+              file=sys.stderr)
+        ok = 1
+    return ok
+
+
+if __name__ == "__main__":
+    sys.exit(main(quick="--quick" in sys.argv))

@@ -11,9 +11,11 @@ Public API:
 from .expr import (Dim, Expr, ShapeError, Var, add, const, identity, inverse,
                    matmul, scale, sub, transpose, var, zero)
 from .program import Program, Statement, dim
-from .factored import (DeltaRep, DenseDelta, HStack, LowRank,
+from .factored import (DeltaCarrier, DeltaRep, DenseDelta, HStack,
+                       LowRank, LowRankCarrier, NoOpCarrier,
+                       RowLocalCarrier, as_carrier, detect_row_local,
                        pad_factors_to_rank, recompress_factors,
-                       stack_update_arrays)
+                       stack_carriers, stack_update_arrays)
 from .delta import DeltaEnv, derive, derive_delta, IncrementalInverseError
 from .compiler import (Assign, CompiledProgram, DeltaView, Trigger,
                        ViewUpdate, batch_bucket, compile_batched_trigger,
@@ -32,6 +34,8 @@ __all__ = [
     "inverse", "matmul", "scale", "sub", "transpose", "var", "zero",
     "Program", "Statement", "dim",
     "DeltaRep", "DenseDelta", "HStack", "LowRank",
+    "DeltaCarrier", "LowRankCarrier", "RowLocalCarrier", "NoOpCarrier",
+    "as_carrier", "detect_row_local", "stack_carriers",
     "pad_factors_to_rank", "recompress_factors", "stack_update_arrays",
     "DeltaEnv", "derive", "derive_delta", "IncrementalInverseError",
     "Assign", "CompiledProgram", "DeltaView", "Trigger", "ViewUpdate",

@@ -13,6 +13,7 @@ Backends for the rank-k apply (``M += U Vᵀ``) are pluggable:
 from __future__ import annotations
 
 import functools
+import warnings
 from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
@@ -174,6 +175,29 @@ def trigger_touched_views(trigger: Trigger) -> Tuple[Tuple[str, ...],
     return written, tuple(sorted(read))
 
 
+_donation_warned = False
+
+
+def _warn_donation_ignored() -> None:
+    """One-time capability warning: ``donate=True`` on a backend that
+    silently ignores donation (CPU) still pays a full copy of every
+    written view per firing.  Roofline comparisons of the dense vs
+    row-slab sweeps are misread without this — the "in-place" dense
+    sweep is really write-allocate + copy there, flattering the slab
+    path by exactly one ``n·m`` write.  Fires once per process."""
+    global _donation_warned
+    if _donation_warned:
+        return
+    if jax.default_backend() == "cpu":
+        _donation_warned = True
+        warnings.warn(
+            "buffer donation requested but the CPU backend silently "
+            "ignores it: written views are copied, not updated in place. "
+            "Interpret sweep rooflines (dense vs row-slab) accordingly; "
+            "donation is honored on TPU/GPU.",
+            RuntimeWarning, stacklevel=3)
+
+
 def build_trigger_fn(trigger: Trigger, program: Program,
                      binding: Optional[Dict[str, int]] = None,
                      jit: bool = True,
@@ -193,6 +217,8 @@ def build_trigger_fn(trigger: Trigger, program: Program,
     binding = dict(program.dims if binding is None else binding)
     apply_fn = _get_apply_fn(apply_backend)
     written, read_only = trigger_touched_views(trigger)
+    if donate:
+        _warn_donation_ignored()
 
     def core(written_vals: Tuple[Array, ...], read_vals: Tuple[Array, ...],
              u: Array, v: Array) -> Tuple[Array, ...]:
@@ -216,6 +242,334 @@ def build_trigger_fn(trigger: Trigger, program: Program,
     def run(views: Env, u: Array, v: Array) -> Env:
         new_vals = core(tuple(views[n] for n in written),
                         tuple(views[n] for n in read_only), u, v)
+        views.update(zip(written, new_vals))
+        return views
+
+    return run
+
+
+# ---------------------------------------------------------------------------
+# row-slab trigger execution (row-local carriers, §3–§5 containment)
+# ---------------------------------------------------------------------------
+
+
+def _expr_refs(e: Expr, names) -> bool:
+    """Whether ``e`` references any :class:`~repro.core.expr.Var` in
+    ``names`` (iterative — factor chains can be deep)."""
+    stack = [e]
+    while stack:
+        x = stack.pop()
+        if isinstance(x, ex.Var) and x.name in names:
+            return True
+        stack.extend(x.children)
+    return False
+
+
+def _compact_left_safe(e: Expr, left) -> bool:
+    """Whether a left factor-block expression can be evaluated with the
+    update's **compact** ``(r, k)`` row block bound in place of the dense
+    ``(n, k)`` scattered factor.
+
+    This is :func:`~repro.core.delta.row_support_preserved` sharpened
+    into an execution contract: every constructor that preserves row
+    support also *commutes with the row gather* — ``(α·L)[rows] =
+    α·L[rows]``, ``(L @ B)[rows] = L[rows] @ B``, and ``Add`` /
+    ``HStack`` / ``ColSlice`` act per-row or per-column — provided no
+    compact-shaped value ever reaches a dense position (a ``MatMul``
+    right operand, a ``Scale`` factor).  ``Zero`` is excluded: its
+    staged shape comes from the binding's dense dims.  A ``False`` here
+    only costs the dense-chain rebuild the trigger always supported.
+    """
+    if isinstance(e, ex.Var):
+        return e.name in left
+    if isinstance(e, ex.Scale):
+        return (not _expr_refs(e.factor, left)
+                and _compact_left_safe(e.operand, left))
+    if isinstance(e, ex.MatMul):
+        return (_compact_left_safe(e.lhs, left)
+                and not _expr_refs(e.rhs, left))
+    if isinstance(e, ex.Add):
+        return all(_compact_left_safe(t, left) for t in e.terms)
+    if isinstance(e, HStack):
+        return all(_compact_left_safe(b, left) for b in e.blocks)
+    if isinstance(e, ColSlice):
+        return _compact_left_safe(e.operand, left)
+    return False
+
+
+def compact_chain_names(trigger: Trigger):
+    """The trigger's left-factor vars that stay compact end to end, or
+    ``None`` if this trigger cannot run its factor chain compactly.
+
+    A trigger qualifies when every maintained view is a row-local
+    low-rank update and every assign that (transitively) consumes the
+    update's left factor is :func:`_compact_left_safe` — then the whole
+    chain can be evaluated on the ``(r, k)`` row block and no dense
+    ``(n, k)`` factor is ever materialized."""
+    if any(up.kind != "lowrank" for up in trigger.updates):
+        return None
+    if any(trigger.carriers.get(up.view) != "row_local"
+           for up in trigger.updates):
+        return None
+    left = {trigger.u_var.name}
+    for a in trigger.assigns:
+        if not _expr_refs(a.expr, left):
+            continue
+        if not _compact_left_safe(a.expr, left):
+            return None
+        left.add(a.name)
+    for up in trigger.updates:
+        if up.u not in left or up.v in left:
+            return None
+    return left
+
+
+def _np_evaluate(e: Expr, env: Env, binding: Dict[str, int],
+                 cache: Dict[int, "np.ndarray"]):
+    """Numpy twin of :func:`evaluate` for the in-place compact path.
+
+    A compact firing's factor chain is a handful of skinny matmuls on
+    `(r, k)`-sized arrays — eager jax dispatch overhead dwarfs the
+    arithmetic there, so the host path evaluates with numpy directly
+    (same op semantics, float32 throughout)."""
+    import numpy as np
+
+    def go(x: Expr):
+        hit = cache.get(id(x))
+        if hit is not None:
+            return hit
+        if isinstance(x, ex.Var):
+            out = np.asarray(env[x.name])
+        elif isinstance(x, ex.Zero):
+            out = np.zeros((_dim(x.shape[0], binding),
+                            _dim(x.shape[1], binding)), np.float32)
+        elif isinstance(x, ex.Identity):
+            out = np.eye(_dim(x.shape[0], binding), dtype=np.float32)
+        elif isinstance(x, ex.Const):
+            out = np.full((1, 1), x.value, np.float32)
+        elif isinstance(x, ex.MatMul):
+            out = go(x.lhs) @ go(x.rhs)
+        elif isinstance(x, ex.Add):
+            out = functools.reduce(np.add, [go(t) for t in x.terms])
+        elif isinstance(x, ex.Scale):
+            f = go(x.factor)
+            if f.ndim == 2:  # (1,1) scalar view
+                f = f[0, 0]
+            out = f * go(x.operand)
+        elif isinstance(x, ex.Transpose):
+            out = go(x.operand).T
+        elif isinstance(x, ex.Inverse):
+            a = go(x.operand)
+            out = 1.0 / a if a.shape == (1, 1) else np.linalg.inv(a)
+        elif isinstance(x, HStack):
+            out = np.concatenate([go(b) for b in x.blocks], axis=1)
+        elif isinstance(x, ColSlice):
+            out = go(x.operand)[:, x.col:x.col + 1]
+        else:
+            raise TypeError(f"cannot evaluate {type(x).__name__}")
+        cache[id(x)] = out
+        return out
+
+    return go(e)
+
+
+def build_rowlocal_inplace_fn(trigger: Trigger, program: Program,
+                              binding: Optional[Dict[str, int]] = None):
+    """In-place CPU apply for a fully row-local trigger, or ``None``.
+
+    XLA on CPU ignores buffer donation, so every jitted firing rewrites
+    each written view in full — a copy floor that swamps the row-slab
+    win no matter how contained the update is (at serving shapes the
+    floor is tens of milliseconds of pure memcpy).  When the trigger's
+    whole factor chain is compact (:func:`compact_chain_names`), none
+    of that machinery is needed: this builder returns
+    ``run(views, rows, block, v) -> views`` which evaluates the chain
+    eagerly on the compact ``(r, k)`` factors and mutates each view's
+    rows **in place** — ``view[rows] += L @ Rᵀ`` on mutable ``np``
+    storage — touching exactly ``r·m`` elements per view and nothing
+    else.  No padding, no rank buckets, no compile cache: shapes are
+    data, not program structure.
+
+    Views still held as jax arrays are converted to ``np`` storage once
+    (a final copy); later jit firings re-ingest them transparently, so
+    mixed carrier/dense streams stay exact and pay one conversion per
+    regime switch instead of a copy floor per firing.  Engines engage
+    this path only when unguarded (transactional rollback needs the
+    staged copy-on-write firing) — see
+    ``IncrementalEngine(rowlocal_apply=...)``.
+    """
+    names = compact_chain_names(trigger)
+    if names is None:
+        return None
+    binding = dict(program.dims if binding is None else binding)
+    written, read_only = trigger_touched_views(trigger)
+    import numpy as np
+
+    def run(views: Env, rows, block, v) -> Env:
+        rows = np.asarray(rows, dtype=np.int32)
+        env: Env = {}
+        for name in written:
+            arr = views[name]
+            if not isinstance(arr, np.ndarray):
+                arr = np.array(arr, dtype=np.float32)
+                views[name] = arr
+            env[name] = arr
+        for name in read_only:
+            env[name] = views[name]
+        env[trigger.u_var.name] = np.asarray(block, dtype=np.float32)
+        env[trigger.v_var.name] = np.asarray(v, dtype=np.float32)
+        cache: Dict[int, "np.ndarray"] = {}
+        for a in trigger.assigns:
+            env[a.name] = _np_evaluate(a.expr, env, binding, cache)
+        for up in trigger.updates:
+            L = env[up.u]
+            R = env[up.v]
+            views[up.view][rows] += L @ R.T
+        return views
+
+    return run
+
+
+def build_rowlocal_trigger_fn(trigger: Trigger, program: Program,
+                              binding: Optional[Dict[str, int]] = None,
+                              row_bucket: int = 8,
+                              jit: bool = True,
+                              apply_backend: str = "xla",
+                              donate: bool = False
+                              ) -> Callable[[Env, Array, Array, Array], Env]:
+    """Stage a trigger for row-local carriers: ``(views, rows, B, V) -> views``.
+
+    ``rows`` is the affected-row index vector padded to the static
+    ``row_bucket`` with the **out-of-bounds sentinel** ``n`` (``B``
+    padded with zero rows).  JAX's scatter drops out-of-bounds indices
+    and its gather clamps them, so the padding is exact end-to-end: the
+    scattered dense-shaped ``u`` never sees the sentinel rows, and the
+    clamped garbage a factor gather picks up is scattered right back
+    out of bounds.
+
+    Execution has two regimes.  When the whole trigger is row-local
+    and every left factor-block expression is compact-safe
+    (:func:`compact_chain_names`), the factor chain runs **compactly**:
+    the ``(row_bucket, k)`` block is bound directly as the update's
+    left factor, every downstream left factor stays ``(row_bucket, k)``
+    (row-preserving constructors commute with the row gather), and each
+    view updates by ``view.at[rows].add(L_compact @ Rᵀ)`` — no dense
+    ``(n, k)`` factor is ever materialized, so the firing's traffic is
+    the written views plus ``O(r·(k + m))``.  Otherwise the dense-shaped
+    ``u`` is rebuilt by scatter, the chain is evaluated exactly as the
+    dense trigger would, row-local views take the row-slab gather-GER-
+    scatter (``view.at[rows].add(L[rows] @ Rᵀ)``) and widened views the
+    ordinary dense sweep.  With ``apply_backend="pallas"`` the row-slab
+    update of closed views goes through the touched-slab Pallas kernel
+    (:func:`repro.kernels.rank_update_rows_pallas`) whenever the
+    concrete rows admit a slab plan (the kernel consumes the
+    dense-shaped factor, so the slab-plan path keeps the dense chain).
+
+    Bit-exactness caveat: ``at[].add`` sums ``L[rows] @ Rᵀ`` into the
+    view rather than forming ``view + u vᵀ``, so float rounding can
+    differ from the dense path by ~1 ulp; the property suite pins the
+    agreement tolerance.
+    """
+    binding = dict(program.dims if binding is None else binding)
+    apply_fn = _get_apply_fn(apply_backend)
+    written, read_only = trigger_touched_views(trigger)
+    if donate:
+        _warn_donation_ignored()
+    x = program.inputs[trigger.input_name]
+    n_in = _dim(x.shape[0], binding)
+    k = trigger.rank
+    use_pallas = apply_backend == "pallas"
+    compact_names = compact_chain_names(trigger)
+
+    def _compact_core():
+        # fully row-local trigger: the factor chain runs on the compact
+        # (row_bucket, k) block — sentinel-padded rows carry zero block
+        # rows through every preserving constructor and their scatter
+        # contributions are dropped as out-of-bounds, so no dense (n, k)
+        # factor exists anywhere in the program
+        def core(written_vals, read_vals, rows, block, v, slab_ids):
+            env: Env = dict(zip(written, written_vals))
+            env.update(zip(read_only, read_vals))
+            env[trigger.u_var.name] = block
+            env[trigger.v_var.name] = v
+            cache: Dict[int, Array] = {}
+            for a in trigger.assigns:
+                env[a.name] = evaluate(a.expr, env, binding, cache)
+            for up in trigger.updates:
+                L, R = env[up.u], env[up.v]
+                env[up.view] = env[up.view].at[rows].add(
+                    jnp.dot(L, R.T, preferred_element_type=jnp.float32),
+                    indices_are_sorted=True)
+            return tuple(env[name] for name in written)
+
+        if jit:
+            return jax.jit(core, donate_argnums=(0,) if donate else ())
+        return core
+
+    def _core(slab: Optional[int], num_slabs: int):
+        if slab is None and compact_names is not None:
+            return _compact_core()
+        # one staged body per slab plan shape (None = XLA scatter path)
+        def core(written_vals, read_vals, rows, block, v, slab_ids):
+            env: Env = dict(zip(written, written_vals))
+            env.update(zip(read_only, read_vals))
+            u = jnp.zeros((n_in, k), jnp.float32).at[rows].add(
+                block, indices_are_sorted=True)
+            env[trigger.u_var.name] = u
+            env[trigger.v_var.name] = v
+            cache: Dict[int, Array] = {}
+            for a in trigger.assigns:
+                env[a.name] = evaluate(a.expr, env, binding, cache)
+            for up in trigger.updates:
+                if up.kind != "lowrank":
+                    env[up.view] = env[up.view] + env[up.d]
+                    continue
+                L, R = env[up.u], env[up.v]
+                if trigger.carriers.get(up.view) != "row_local":
+                    env[up.view] = apply_fn(env[up.view], L, R)
+                    continue
+                view = env[up.view]
+                if slab is not None and view.shape[0] % slab == 0:
+                    from repro.kernels import ops as rk_ops
+                    bn = rk_ops._pick_block(view.shape[1], 512)
+                    if view.shape[1] % bn == 0:
+                        from repro.kernels.rank_update_rows import \
+                            rank_update_rows_pallas
+                        env[up.view] = rank_update_rows_pallas(
+                            view, slab_ids, L, R, slab=slab, bn=bn,
+                            interpret=rk_ops._interpret_default(None))
+                        continue
+                # gather-GER-scatter: clamped OOB gather rows are
+                # dropped again by the OOB scatter — exact
+                env[up.view] = view.at[rows].add(
+                    jnp.dot(L[rows], R.T,
+                            preferred_element_type=jnp.float32),
+                    indices_are_sorted=True)
+            return tuple(env[name] for name in written)
+
+        if jit:
+            return jax.jit(core, donate_argnums=(0,) if donate else ())
+        return core
+
+    cores: Dict[Tuple[Optional[int], int], Callable] = {}
+
+    def run(views: Env, rows, block, v) -> Env:
+        import numpy as np
+        rows = np.asarray(rows, dtype=np.int32)
+        slab = None
+        slab_ids = np.zeros((0,), np.int32)
+        if use_pallas:
+            from repro.kernels import ops as rk_ops
+            plan = rk_ops.slab_plan(n_in, rows[rows < n_in])
+            if plan is not None:
+                slab, slab_ids = plan
+        key = (slab, int(np.shape(slab_ids)[0]))
+        core = cores.get(key)
+        if core is None:
+            core = cores[key] = _core(*key)
+        new_vals = core(tuple(views[n] for n in written),
+                        tuple(views[n] for n in read_only),
+                        rows, block, v, slab_ids)
         views.update(zip(written, new_vals))
         return views
 

@@ -23,7 +23,8 @@ from typing import Dict, List, Literal, Optional, Sequence, Tuple
 
 from . import expr as ex
 from .cost import Cost, dense_delta_cost, expr_cost, lowrank_cost, shape_of
-from .delta import DeltaEnv, IncrementalInverseError, derive, derive_delta
+from .delta import (DeltaEnv, IncrementalInverseError, derive, derive_delta,
+                    row_support_preserved)
 from .expr import Expr, Var
 from .factored import DeltaRep, DenseDelta, HStack, LowRank, _hstack
 from .program import Program, Statement
@@ -60,6 +61,12 @@ class Trigger:
     updates: List[ViewUpdate] = field(default_factory=list)
     cost: Cost = Cost.zero()
     reps: Dict[str, str] = field(default_factory=dict)  # view -> chosen rep
+    # view -> carrier kind a row-local input update propagates to it:
+    # "row_local" (delta's row support provably ⊆ the update's affected
+    # rows — §4 closure, see repro.core.delta.row_support_preserved),
+    # "low_rank" (factored but support widens), "dense" (hybrid rep).
+    # The input's own += is always row-local.
+    carriers: Dict[str, str] = field(default_factory=dict)
 
     def __repr__(self) -> str:
         lines = [f"ON UPDATE {self.input_name} BY ({self.u_var.name}, "
@@ -395,6 +402,13 @@ def _compile_trigger(program: Program, input_name: str, rank: int,
     trig = Trigger(input_name=input_name, rank=rank, u_var=u, v_var=v)
     trig.updates.append(ViewUpdate(view=input_name, kind="lowrank",
                                    u=u.name, v=v.name))
+    # carrier-kind propagation: which maintained views a row-local input
+    # update reaches without leaving its affected rows.  The input's own
+    # += trivially stays row-local; a view's does iff its left factor
+    # expression is row-support-preserving over the already-preserving
+    # factor vars (containment composes down the delta chain).
+    trig.carriers[input_name] = "row_local"
+    preserving = {u.name}
     total = Cost.zero()
 
     for st in program.statements:
@@ -411,6 +425,7 @@ def _compile_trigger(program: Program, input_name: str, rank: int,
             env.deltas[st.target.name] = DenseDelta(
                 ex.var(dname, st.target.shape))
             total = total + expr_cost(dexpr, binding)
+            trig.carriers[st.target.name] = "dense"
         else:
             lr = d if isinstance(d, LowRank) else _refactor_dense(d)
             uname = f"dU_{st.target.name}"
@@ -426,6 +441,11 @@ def _compile_trigger(program: Program, input_name: str, rank: int,
                 ex.var(uname, (st.target.shape[0], k)),
                 ex.var(vname, (st.target.shape[1], k)))
             total = total + lowrank_cost(lr, binding)
+            if row_support_preserved(uexpr, preserving):
+                trig.carriers[st.target.name] = "row_local"
+                preserving.add(uname)
+            else:
+                trig.carriers[st.target.name] = "low_rank"
         trig.reps[st.target.name] = rep
     trig.cost = total
     return trig

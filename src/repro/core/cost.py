@@ -228,6 +228,43 @@ def batch_crossover_rank(view_shape: Tuple[int, int],
 
 
 # ---------------------------------------------------------------------------
+# row-local (sparsity-aware) carrier costs
+# ---------------------------------------------------------------------------
+
+
+def rowlocal_apply_cost(view_shape: Tuple[int, int], rank: int,
+                        rows: int) -> Cost:
+    """Cost of the row-slab GER: ``M[rows] += B Vᵀ`` touching ``rows``
+    of the n rows.  FLOPs and M-traffic both scale with the affected
+    row count — the §3 "local change" priced as data instead of
+    structure.  The right factor still crosses memory whole."""
+    n, m = view_shape
+    r = min(int(rows), n)
+    return Cost(2.0 * rank * r * m, ELT * (2 * r * m + rank * (r + m)))
+
+
+def rowlocal_crossover_fraction(view_shape: Tuple[int, int], rank: int,
+                                efficiency: float = 0.5) -> float:
+    """Affected fraction below which the row-slab sweep beats the dense
+    rank-k sweep.
+
+    The slab path's gather/scatter runs at a discount (``efficiency``,
+    wall-clock per byte relative to the dense kernel's streaming reads
+    — slab DMA is strided and the index plan costs host time), so the
+    crossover solves ``traffic_slab(r) = efficiency · traffic_dense``
+    for ``r/n`` rather than the trivial ``r < n``.  Engines default
+    their ``rowlocal_fraction`` below this (0.25) — the model is used
+    by the planner to decide *strategy*, the engine bound to decide
+    *kernel*.
+    """
+    n, m = view_shape
+    k = max(1, int(rank))
+    dense = 2.0 * n * m + k * (n + m)
+    r_star = (efficiency * dense - k * m) / (2.0 * m + k)
+    return min(1.0, max(0.0, r_star / max(n, 1)))
+
+
+# ---------------------------------------------------------------------------
 # asymptotic (Table 2) reports — used for docs/EXPERIMENTS, not decisions
 # ---------------------------------------------------------------------------
 

@@ -260,3 +260,52 @@ def _derive_scalar_product(e: ex.Scale, env: DeltaEnv, cache) -> DeltaRep:
     if not terms:
         return LowRank.zero()
     return DenseDelta(ex.add(*terms))
+
+
+# ---------------------------------------------------------------------------
+# row-support closure analysis (sparsity-aware carriers, §3–§5)
+# ---------------------------------------------------------------------------
+
+
+def row_support_preserved(e: Expr, u_names) -> bool:
+    """Whether ``e``'s row support is contained in the update's rows.
+
+    ``e`` is a compiled trigger's left factor-block expression;
+    ``u_names`` the set of factor Vars already known row-contained (the
+    input's own ``dU_…`` plus any upstream view factor the compiler has
+    proved preserving — containment composes down the chain).  The §4
+    delta rules preserve row-locality under exactly these constructors:
+
+      * the update factor itself (``ΔA`` rows ARE the affected rows);
+      * ``Zero`` (empty support is contained in anything);
+      * ``Scale`` — any scalar factor, row support untouched;
+      * ``MatMul`` with a preserving *left* operand — right-
+        multiplication mixes columns, never rows (this is the
+        ``ΔE1 · E2`` term of the product rule and every capacitance
+        chain hanging off it);
+      * ``Add`` / ``HStack`` / ``ColSlice`` of preserving parts.
+
+    Everything else widens: a ``Transpose`` moves the support to the
+    columns, an ``Inverse`` (Woodbury capacitance) is dense in general,
+    and any view/const/other-var leaf carries its own full support —
+    that includes the ``E1 · ΔE2`` product-rule term, whose left operand
+    is a base view.  Sound but conservative: a ``False`` only costs the
+    dense sweep we run today.
+    """
+    if isinstance(u_names, str):
+        u_names = {u_names}
+    if isinstance(e, ex.Var):
+        return e.name in u_names
+    if isinstance(e, ex.Zero):
+        return True
+    if isinstance(e, ex.Scale):
+        return row_support_preserved(e.operand, u_names)
+    if isinstance(e, ex.MatMul):
+        return row_support_preserved(e.lhs, u_names)
+    if isinstance(e, ex.Add):
+        return all(row_support_preserved(t, u_names) for t in e.terms)
+    if isinstance(e, HStack):
+        return all(row_support_preserved(b, u_names) for b in e.blocks)
+    if isinstance(e, ColSlice):
+        return row_support_preserved(e.operand, u_names)
+    return False

@@ -395,3 +395,286 @@ def pad_factors_to_rank(P: "np.ndarray", Q: "np.ndarray", rank: int
     pad = ((0, 0), (0, rank - K))
     return np.pad(P, pad), np.pad(Q, pad)
 
+
+# ---------------------------------------------------------------------------
+# runtime delta carriers (sparsity-aware containment, §3–§5)
+# ---------------------------------------------------------------------------
+#
+# The symbolic layer above describes delta *structure* at compile time;
+# the carriers below describe one concrete update at run time.  The
+# engine historically took an implicit dense-shaped ``(P, Q)`` pair —
+# so a 3-rows-touched update paid the same rank-k dense sweep as a
+# full-matrix perturbation.  A carrier makes the containment explicit:
+#
+#   * ``LowRankCarrier``  — today's path, dense-shaped ``P Qᵀ`` factors;
+#   * ``RowLocalCarrier`` — an affected-row index set plus the compact
+#     row block: ``ΔA = scatter(rows, B) Vᵀ`` touches only ``r`` of
+#     ``n`` rows.  Row support is preserved by exactly the §4 closure
+#     the compiler proves per view (see ``repro.core.delta
+#     .row_support_preserved``): left-multiplication into a chain,
+#     adds of preserving terms, and scalar scales; anything else —
+#     transposes, Woodbury inverses, right-factor deltas — widens the
+#     carrier to ``LowRankCarrier`` via :meth:`factors`.
+#   * ``NoOpCarrier``     — a tolerance-compared empty that legally
+#     skips firing altogether (the delta-deduplication gate).
+#
+# Carriers are host-side numpy values (like the stacking helpers above):
+# ranks and row counts stay static Python ints so triggers bucket and
+# jit-cache exactly as before.  The dense path is bit-identical — a
+# ``LowRankCarrier`` is *literally* the old ``(P, Q)`` pair.
+
+
+class DeltaCarrier:
+    """One concrete factored update ``ΔA`` to an engine input."""
+
+    kind: str = "abstract"
+
+    @property
+    def rank(self) -> int:
+        raise NotImplementedError
+
+    @property
+    def nm(self) -> Tuple[int, int]:
+        """The (n, m) shape of the carried delta."""
+        raise NotImplementedError
+
+    def factors(self) -> Tuple["np.ndarray", "np.ndarray"]:
+        """Widen to dense-shaped ``(P, Q)`` float32 factors (the oracle
+        representation every carrier must agree with exactly)."""
+        raise NotImplementedError
+
+    def affected_fraction(self) -> float:
+        """Fraction of rows the delta can touch (1.0 unless contained)."""
+        return 1.0
+
+    def norm_bound(self) -> float:
+        """Upper bound on ``‖ΔA‖_F`` (``‖P‖_F · ‖Q‖_F``)."""
+        raise NotImplementedError
+
+    def is_noop(self, tol: float = 0.0) -> bool:
+        """Whether applying this delta is guaranteed to move no view by
+        more than ``tol`` (in delta Frobenius norm)."""
+        return self.norm_bound() <= tol
+
+
+def _as_f32_factor(a, name: str) -> "np.ndarray":
+    import numpy as np
+    a = np.asarray(a, dtype=np.float32)
+    if a.ndim == 1:
+        a = a[:, None]
+    if a.ndim != 2:
+        raise ex.ShapeError(f"{name} must be 2-D, got shape {a.shape}")
+    return a
+
+
+@dataclass(frozen=True)
+class LowRankCarrier(DeltaCarrier):
+    """Dense-shaped factored delta ``ΔA = P Qᵀ`` — the classic carrier."""
+
+    P: "np.ndarray"   # (n, k)
+    Q: "np.ndarray"   # (m, k)
+
+    kind = "low_rank"
+
+    @property
+    def rank(self) -> int:
+        return int(self.P.shape[1])
+
+    @property
+    def nm(self) -> Tuple[int, int]:
+        return int(self.P.shape[0]), int(self.Q.shape[0])
+
+    def factors(self) -> Tuple["np.ndarray", "np.ndarray"]:
+        return self.P, self.Q
+
+    def norm_bound(self) -> float:
+        import numpy as np
+        return float(np.linalg.norm(self.P)) * float(np.linalg.norm(self.Q))
+
+
+@dataclass(frozen=True)
+class RowLocalCarrier(DeltaCarrier):
+    """Row-contained factored delta: ``ΔA = scatter_n(rows, block) @ Vᵀ``.
+
+    ``rows`` is the sorted, duplicate-free affected-row index set
+    (``r`` entries), ``block`` the compact ``(r, k)`` left factor whose
+    i-th row lands on row ``rows[i]``, and ``V`` the ordinary dense
+    ``(m, k)`` right factor.  Only ``r/n`` of the left factor is ever
+    stored or swept — the §3 "local change" contained as data.
+    """
+
+    rows: "np.ndarray"    # (r,) int32, sorted unique, all < n
+    block: "np.ndarray"   # (r, k) float32
+    V: "np.ndarray"       # (m, k) float32
+    n: int                # full row dimension of the carried delta
+
+    kind = "row_local"
+
+    def __post_init__(self):
+        if self.rows.ndim != 1 or self.block.ndim != 2 or self.V.ndim != 2:
+            raise ex.ShapeError(
+                f"row-local carrier dims: rows {self.rows.shape}, "
+                f"block {self.block.shape}, V {self.V.shape}")
+        if self.block.shape[0] != self.rows.shape[0]:
+            raise ex.ShapeError(
+                f"block rows {self.block.shape[0]} != affected rows "
+                f"{self.rows.shape[0]}")
+        if self.block.shape[1] != self.V.shape[1]:
+            raise ex.ShapeError(
+                f"carrier rank mismatch: block {self.block.shape} vs "
+                f"V {self.V.shape}")
+
+    @property
+    def rank(self) -> int:
+        return int(self.block.shape[1])
+
+    @property
+    def rows_touched(self) -> int:
+        return int(self.rows.shape[0])
+
+    @property
+    def nm(self) -> Tuple[int, int]:
+        return int(self.n), int(self.V.shape[0])
+
+    def affected_fraction(self) -> float:
+        return self.rows_touched / max(int(self.n), 1)
+
+    def factors(self) -> Tuple["np.ndarray", "np.ndarray"]:
+        """Widen: scatter the compact block into a dense-shaped P."""
+        import numpy as np
+        P = np.zeros((int(self.n), self.rank), dtype=np.float32)
+        P[self.rows] = self.block
+        return P, self.V
+
+    def norm_bound(self) -> float:
+        import numpy as np
+        return (float(np.linalg.norm(self.block))
+                * float(np.linalg.norm(self.V)))
+
+    def scale(self, factor: float) -> "RowLocalCarrier":
+        """Scalar scale preserves row support exactly (§4 closure)."""
+        return RowLocalCarrier(self.rows, self.block * float(factor),
+                               self.V, self.n)
+
+    def matmul_right(self, W: "np.ndarray") -> "RowLocalCarrier":
+        """``ΔA @ W`` preserves row support: only V changes (§4 closure
+        — right-multiplication acts on columns, never rows)."""
+        import numpy as np
+        W = np.asarray(W, dtype=np.float32)
+        return RowLocalCarrier(self.rows, self.block, W.T @ self.V, self.n)
+
+
+@dataclass(frozen=True)
+class NoOpCarrier(DeltaCarrier):
+    """A delta known (to tolerance) to change nothing — skips firing."""
+
+    n: int
+    m: int
+
+    kind = "noop"
+
+    @property
+    def rank(self) -> int:
+        return 0
+
+    @property
+    def nm(self) -> Tuple[int, int]:
+        return int(self.n), int(self.m)
+
+    def affected_fraction(self) -> float:
+        return 0.0
+
+    def factors(self) -> Tuple["np.ndarray", "np.ndarray"]:
+        import numpy as np
+        return (np.zeros((int(self.n), 1), np.float32),
+                np.zeros((int(self.m), 1), np.float32))
+
+    def norm_bound(self) -> float:
+        return 0.0
+
+    def is_noop(self, tol: float = 0.0) -> bool:
+        return True
+
+
+def as_carrier(u, v=None) -> DeltaCarrier:
+    """Normalize an update to a carrier.
+
+    Accepts a :class:`DeltaCarrier` (returned as-is, ``v`` must then be
+    ``None``) or a raw factor pair — the compatibility path every
+    existing call site rides for free."""
+    if isinstance(u, DeltaCarrier):
+        if v is not None:
+            raise ValueError("carrier updates take no separate v factor")
+        return u
+    if v is None:
+        raise ValueError("raw factor updates need both u and v")
+    return LowRankCarrier(_as_f32_factor(u, "u"), _as_f32_factor(v, "v"))
+
+
+def detect_row_local(u, v, *, max_fraction: float = 0.5,
+                     noop_tol: float = 0.0) -> DeltaCarrier:
+    """Classify raw ``(u, v)`` factors into the tightest carrier.
+
+    Scans ``u`` for its nonzero row support (O(n·k), cheap next to any
+    sweep): empty support (or a delta under ``noop_tol``) is a
+    :class:`NoOpCarrier`; support ≤ ``max_fraction`` of the rows is a
+    :class:`RowLocalCarrier`; anything wider stays low-rank.  Exact —
+    zero rows of ``u`` contribute nothing to ``u vᵀ``.
+    """
+    import numpy as np
+    u = _as_f32_factor(u, "u")
+    v = _as_f32_factor(v, "v")
+    mask = np.any(u != 0.0, axis=1)
+    rows = np.flatnonzero(mask).astype(np.int32)
+    n = u.shape[0]
+    if rows.size == 0:
+        return NoOpCarrier(n, v.shape[0])
+    c: DeltaCarrier
+    if rows.size <= max_fraction * n:
+        c = RowLocalCarrier(rows, u[rows], v, n)
+    else:
+        c = LowRankCarrier(u, v)
+    if noop_tol > 0.0 and c.is_noop(noop_tol):
+        return NoOpCarrier(n, v.shape[0])
+    return c
+
+
+def stack_carriers(carriers: Sequence[DeltaCarrier]) -> DeltaCarrier:
+    """Stack a batch of carriers for one input into a single carrier.
+
+    Row-local closure under addition: the union of the row supports.
+    All-row-local batches stay row-local (rows = sorted union, compact
+    blocks re-scattered into union coordinates, ranks concatenated);
+    any dense-shaped member widens the whole stack to
+    :class:`LowRankCarrier`; no-ops contribute nothing.  This is the §6
+    batched-trigger stacking restated on carriers — the stacked rank is
+    still ``Σ k_t`` and the dense widening reproduces
+    :func:`stack_update_arrays` bit-for-bit.
+    """
+    import numpy as np
+    live = [c for c in carriers if c.kind != "noop"]
+    if not live:
+        if not carriers:
+            raise ValueError("empty carrier batch")
+        n, m = carriers[0].nm
+        return NoOpCarrier(n, m)
+    if all(c.kind == "row_local" for c in live):
+        n = live[0].n
+        if any(c.n != n for c in live):
+            raise ex.ShapeError("row-local carriers disagree on n")
+        rows = np.unique(np.concatenate([c.rows for c in live]))
+        rows = rows.astype(np.int32)
+        pos = {int(r): i for i, r in enumerate(rows)}
+        total_k = sum(c.rank for c in live)
+        block = np.zeros((rows.size, total_k), np.float32)
+        V = np.concatenate([c.V for c in live], axis=1)
+        off = 0
+        for c in live:
+            idx = np.fromiter((pos[int(r)] for r in c.rows),
+                              dtype=np.int64, count=c.rows.size)
+            block[idx, off:off + c.rank] = c.block
+            off += c.rank
+        return RowLocalCarrier(rows, block, V, n)
+    P, Q = stack_update_arrays([c.factors() for c in live])
+    return LowRankCarrier(P, Q)
+

@@ -33,13 +33,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from .codegen import (_get_apply_fn, build_evaluator,
-                      build_planned_trigger_fn, build_trigger_fn, evaluate,
+                      build_planned_trigger_fn, build_rowlocal_inplace_fn,
+                      build_rowlocal_trigger_fn, build_trigger_fn, evaluate,
                       trigger_flops)
 from .compiler import (CompiledProgram, Trigger, batch_bucket,
                        compile_batched_trigger, compile_delta_trigger,
                        compile_program)
-from .factored import (pad_factors_to_rank, recompress_factors,
-                       stack_update_arrays)
+from .factored import (DeltaCarrier, LowRankCarrier, RowLocalCarrier,
+                       as_carrier, pad_factors_to_rank, recompress_factors,
+                       stack_carriers, stack_update_arrays)
 from .program import Program
 
 Array = jax.Array
@@ -79,6 +81,10 @@ class EngineStats:
     fold_aborts: int = 0          # folds rolled back (guard/chaos), then redone
     reads: int = 0                # output() calls — the read-rate signal that
                                   # online depth selection divides firings by
+    # sparsity-aware carrier counters (repro.core.factored.DeltaCarrier)
+    noop_skips: int = 0           # no-op carriers dropped before any firing
+    rowlocal_firings: int = 0     # firings that swept only touched row slabs
+    widened_carriers: int = 0     # row-local carriers that fell back dense
 
     def per_update_seconds(self) -> float:
         return self.trigger_seconds / max(self.updates_timed, 1)
@@ -96,6 +102,8 @@ class IncrementalEngine:
                  donate: bool = False,
                  max_batch_rank: Optional[int] = None,
                  recompress_tol: float = 1e-6,
+                 rowlocal_fraction: float = 0.25,
+                 rowlocal_apply: str = "auto",
                  flush_size: int = 16,
                  flush_age: float = 0.1,
                  flush_policy: str = "fixed",
@@ -155,7 +163,29 @@ class IncrementalEngine:
         window rank via QR/SVD re-compression.  When a maintenance
         ``plan`` carries per-view ``order`` fields (depth-priced by
         ``plan_program``), the plan's depths are authoritative.
+
+        ``rowlocal_fraction`` is the affected-fraction crossover for
+        row-local carriers (:mod:`repro.core.factored`): a
+        :class:`~repro.core.factored.RowLocalCarrier` touching at most
+        this fraction of its input's rows fires the row-slab trigger
+        variant (sweeps only the touched rows of every view the
+        compiler proved row-local); above it the carrier widens to the
+        dense factored path, which stays the bit-exact oracle.
+
+        ``rowlocal_apply`` picks how a contained row-slab firing
+        executes: ``"jit"`` always stages the row-slab XLA program;
+        ``"inplace"`` mutates the touched rows of each view directly on
+        mutable host storage
+        (:func:`~repro.core.codegen.build_rowlocal_inplace_fn`) when
+        the trigger's whole factor chain is compact — on CPU, where XLA
+        ignores buffer donation, this removes the per-firing full-view
+        rewrite entirely; ``"auto"`` (default) is ``"inplace"`` on the
+        CPU backend and ``"jit"`` elsewhere.  Guarded/chaos engines and
+        triggers with any widened view always use the staged path (the
+        transaction needs copy-on-write rollback).
         """
+        if rowlocal_apply not in ("auto", "jit", "inplace"):
+            raise ValueError(f"unknown rowlocal_apply {rowlocal_apply!r}")
         if flush_policy not in ("fixed", "cost"):
             raise ValueError(f"unknown flush_policy {flush_policy!r}")
         if isinstance(order, dict):
@@ -222,6 +252,13 @@ class IncrementalEngine:
         self._batched_triggers: Dict[Tuple[str, int], Callable] = {}
         self._bucket_trigger_ir: Dict[Tuple[str, int], Trigger] = {}
         self._planned_fns: Dict[Tuple, Callable] = {}
+        # row-slab trigger variants, keyed (input, rank bucket, row bucket)
+        self._rowlocal_fns: Dict[Tuple, Callable] = {}
+        self.rowlocal_fraction = float(rowlocal_fraction)
+        self.rowlocal_apply = rowlocal_apply
+        # in-place compact appliers, keyed by input (None = chain not
+        # compact); built lazily on first contained firing
+        self._rowlocal_inplace_fns: Dict[str, Optional[Callable]] = {}
         # batching policy: cap the stacked rank (QR/SVD re-compression past
         # it) and the queue flush thresholds (size in stacked rank,
         # staleness in seconds).
@@ -842,15 +879,27 @@ class IncrementalEngine:
         return dict(computed)
 
     # -- incremental path ------------------------------------------------------
-    def apply_update(self, input_name: str, u: Array, v: Array,
+    def apply_update(self, input_name: str, u: Array,
+                     v: Optional[Array] = None,
                      block: bool = False) -> Dict[str, Array]:
         """Fire the trigger for ``input_name += u @ v.T`` (executing the
         engine's maintenance plan, when one is attached).
+
+        ``u`` may be a :class:`~repro.core.factored.DeltaCarrier`
+        instead of a raw left factor (``v`` then stays ``None``): a
+        no-op carrier skips the firing entirely, a row-local carrier
+        under the engine's ``rowlocal_fraction`` fires the row-slab
+        trigger variant, and everything else widens to this dense path
+        — which remains bit-identical to what it was before carriers
+        existed.
 
         On a guarded engine the update is validated first (rejects go
         to quarantine, views untouched) and the firing is transactional
         (a chaos fault or non-finite output rolls back and returns the
         pre-firing views)."""
+        if isinstance(u, DeltaCarrier) or v is None:
+            return self._apply_carrier(input_name, as_carrier(u, v),
+                                       block=block)
         rank = self.compiled.triggers[input_name].rank
         if self._tiers and self._inputs_deferrable(input_name):
             # deferred-input fast path: bank the factors and return —
@@ -903,6 +952,269 @@ class IncrementalEngine:
             self.guard.after_firing(self)
         return self.views
 
+    # -- sparsity-aware carrier path (repro.core.factored.DeltaCarrier) --------
+    def _rowlocal_ok(self, input_name: str, carrier: DeltaCarrier) -> bool:
+        """Whether a row-local carrier may fire the row-slab trigger.
+
+        Requires: a single-device, non-deferred engine (sharded and
+        depth>=2 engines widen — the dense path is their oracle), an
+        affected fraction under the ``rowlocal_fraction`` crossover, at
+        least one maintained view the compiler proved row-local (else
+        slab sweeping buys nothing), and an empty plan partition (a
+        firing the plan wants to re-evaluate or skip must go through
+        the planned dense codegen).  When *every* maintained view is
+        row-local the plan/§7 decision is priced at the containment-
+        scaled rank ``ceil(rank · frac)`` — a row-slab sweep touches
+        ``r·m`` elements where the dense sweep the crossover was solved
+        for touches ``n·m``, so a high-rank contained burst must not be
+        kicked to re-evaluation at the full-rank price (the same
+        ``K*/frac`` scaling the planner applies; docs/sparse_deltas.md).
+        Triggers with any widened view keep the full-rank price: those
+        views really do pay the dense sweep."""
+        if self.mesh is not None or self._tiers:
+            return False
+        frac = carrier.affected_fraction()
+        if frac > self.rowlocal_fraction:
+            return False
+        trig = self.compiled.triggers[input_name]
+        kinds = [trig.carriers.get(up.view) for up in trig.updates
+                 if up.kind == "lowrank" and up.view != input_name]
+        if not any(kd == "row_local" for kd in kinds):
+            # only the input's own (trivially row-local) self-update is
+            # contained — every maintained view widens, so the slab
+            # trigger buys nothing over the dense sweep
+            return False
+        rank = max(carrier.rank, 1)
+        if all(kd == "row_local" for kd in kinds):
+            rank = max(1, int(np.ceil(rank * frac)))
+        reeval, lazy = self._plan_decision(input_name, rank)
+        return not reeval and not lazy
+
+    def _rowlocal_trigger_fn(self, input_name: str, rank_bucket: int,
+                             row_bucket: int) -> Callable:
+        """The jitted row-slab trigger for (input, rank bucket, row
+        bucket), compiled on first use and shared through the trigger
+        cache like every other variant."""
+        key = (input_name, rank_bucket, row_bucket)
+        fn = self._rowlocal_fns.get(key)
+        if fn is None:
+            trig = self._bucket_trigger(input_name, rank_bucket)
+            fn = self._cached_build(
+                ("rowlocal", input_name, rank_bucket, row_bucket),
+                lambda: build_rowlocal_trigger_fn(
+                    trig, self.program, self.binding,
+                    row_bucket=row_bucket, jit=self._jit,
+                    apply_backend=self._apply_backend,
+                    donate=self._donate))
+            self._rowlocal_fns[key] = fn
+        return fn
+
+    def _apply_carrier(self, input_name: str, carrier: DeltaCarrier,
+                       block: bool = False) -> Dict[str, Array]:
+        """Dispatch one carrier: no-op → skip, contained row-local →
+        row-slab firing, anything else → widen to the dense factored
+        path (``carrier.factors()`` is exact, so widening never changes
+        the result — only the traffic)."""
+        if input_name not in self.compiled.triggers:
+            raise KeyError(f"no trigger for input {input_name!r}; have "
+                           f"{sorted(self.compiled.triggers)}")
+        if carrier.kind == "noop":
+            # legally skip the firing: a no-op moves no view, so there
+            # is nothing for chaos to poison or the guard to validate
+            self.stats.noop_skips += 1
+            self.stats.updates_applied += 1
+            if block:
+                jax.block_until_ready(self.views)
+            return self.views
+        if carrier.kind == "row_local":
+            if self._rowlocal_ok(input_name, carrier):
+                return self._apply_rowlocal(input_name, carrier,
+                                            block=block)
+            self.stats.widened_carriers += 1
+        P, Q = carrier.factors()
+        return self.apply_update(input_name, P, Q, block=block)
+
+    def _apply_rowlocal(self, input_name: str, carrier: RowLocalCarrier,
+                        block: bool = False, t_count: int = 1,
+                        poisoned: bool = False) -> Dict[str, Array]:
+        """Fire the row-slab trigger for one (possibly stacked)
+        row-local carrier: chaos poisoning and guard admission run on
+        the *compact* ``(block, V)`` factors (same call sequence as the
+        dense path — one poison gate per logical update stream entry is
+        preserved by the batch path poisoning members before stacking),
+        then the rank is padded to its power-of-two bucket and the row
+        set to a power-of-two row bucket (out-of-bounds sentinel ``n``,
+        zero block rows — exact, see
+        :func:`~repro.core.codegen.build_rowlocal_trigger_fn`)."""
+        rows = np.asarray(carrier.rows, dtype=np.int32)
+        B = np.asarray(carrier.block, dtype=np.float32)
+        V = np.asarray(carrier.V, dtype=np.float32)
+        if self.chaos is not None and not poisoned:
+            B, V = self.chaos.poison_update(B, V)
+            B = np.asarray(B, dtype=np.float32)
+            V = np.asarray(V, dtype=np.float32)
+        if self.guard is not None:
+            admitted = self.guard.admit_carrier(input_name, rows, B, V,
+                                                count=t_count)
+            if admitted is None:
+                return self.views
+            B, V = admitted
+        t0 = time.perf_counter()
+        rows0, B0, V0 = rows, B, V  # pre-padding (what an abort keeps)
+        rank = B.shape[1]
+        n_in = int(carrier.nm[0])
+        if (self.guard is None and self.chaos is None
+                and (self.rowlocal_apply == "inplace"
+                     or (self.rowlocal_apply == "auto"
+                         and jax.default_backend() == "cpu"))):
+            infn = self._rowlocal_inplace_fn(input_name)
+            if infn is not None:
+                # unguarded compact chain: mutate the touched rows in
+                # place — no padding, no staged program, no copy floor
+                self.views = infn(self.views, rows, B, V)
+                return self._rowlocal_epilogue(input_name, carrier, rank,
+                                               int(rows.shape[0]), t0,
+                                               block, t_count)
+        base = self.compiled.triggers[input_name].rank
+        rank_bucket = rank if rank == base else batch_bucket(rank)
+        if rank_bucket != rank:
+            B = np.concatenate(
+                [B, np.zeros((B.shape[0], rank_bucket - rank),
+                             np.float32)], axis=1)
+            V = np.concatenate(
+                [V, np.zeros((V.shape[0], rank_bucket - rank),
+                             np.float32)], axis=1)
+        r = int(rows.shape[0])
+        row_bucket = max(8, 1 << (r - 1).bit_length())
+        if row_bucket > r:
+            rows = np.concatenate(
+                [rows, np.full(row_bucket - r, n_in, np.int32)])
+            B = np.concatenate(
+                [B, np.zeros((row_bucket - r, rank_bucket), np.float32)],
+                axis=0)
+        fn = self._rowlocal_trigger_fn(input_name, rank_bucket, row_bucket)
+        if self.guard is not None or self.chaos is not None:
+            from repro.guard.txn import FiringAborted
+            try:
+                if self.guard is not None:
+                    self.guard.fire_rowlocal(self, input_name, fn,
+                                             rows, B, V)
+                else:
+                    self.chaos.maybe_raise_in_trigger()
+                    self.views = fn(self.views, rows, B, V)
+            except FiringAborted as e:
+                P0 = np.zeros((n_in, B0.shape[1]), np.float32)
+                P0[rows0] = B0
+                self.guard.on_abort(input_name, P0, V0, e.reason)
+                return self.views
+        else:
+            self.views = fn(self.views, rows, B, V)
+        return self._rowlocal_epilogue(input_name, carrier, rank_bucket, r,
+                                       t0, block, t_count)
+
+    def _rowlocal_inplace_fn(self, input_name: str) -> Optional[Callable]:
+        """The in-place compact applier for ``input_name``'s trigger
+        (``None`` when its factor chain is not compact), built once."""
+        if input_name not in self._rowlocal_inplace_fns:
+            self._rowlocal_inplace_fns[input_name] = \
+                build_rowlocal_inplace_fn(
+                    self.compiled.triggers[input_name], self.program,
+                    self.binding)
+        return self._rowlocal_inplace_fns[input_name]
+
+    def _rowlocal_epilogue(self, input_name: str, carrier: RowLocalCarrier,
+                           rank: int, r: int, t0: float, block: bool,
+                           t_count: int) -> Dict[str, Array]:
+        """Shared accounting tail of a row-slab firing (staged or
+        in-place): plan staleness, timed-sweep stats, firing counters,
+        and the planner's observed affected fraction."""
+        if self.plan is not None:
+            for up in self.compiled.triggers[input_name].updates:
+                self._accum_rank[up.view] = \
+                    self._accum_rank.get(up.view, 0) + rank
+        if block:
+            jax.block_until_ready(self.views)
+            self.stats.trigger_seconds += time.perf_counter() - t0
+            self.stats.updates_timed += t_count
+            self.stats.sweep_flops_timed += \
+                self._rowlocal_sweep_flops(input_name, rank, r)
+        self.stats.updates_applied += t_count
+        self.stats.triggers_fired += 1
+        self.stats.rowlocal_firings += 1
+        if t_count > 1:
+            self.stats.batches_applied += 1
+        self._observe_firing(input_name, carrier.rank, t_count,
+                             affected_fraction=carrier.affected_fraction())
+        if self.guard is not None:
+            self.guard.after_firing(self)
+        return self.views
+
+    def _rowlocal_sweep_flops(self, input_name: str, rank: int,
+                              r: int) -> float:
+        """FLOPs of one row-slab sweep: row-local views pay
+        ``2·rank·r·m``, widened views the full ``2·rank·n·m``."""
+        trig = self.compiled.triggers[input_name]
+        total = 0.0
+        for name, (n, m), _ in self._factored_view_costs(input_name):
+            rows_eff = r if trig.carriers.get(name) == "row_local" else n
+            total += 2.0 * rank * rows_eff * m
+        return total
+
+    def _apply_carrier_batch(self, input_name: str, updates,
+                             block: bool = False) -> Dict[str, Array]:
+        """Batched carrier path: drop no-ops, stack the rest
+        (:func:`~repro.core.factored.stack_carriers` — union row
+        support while everything stays row-local), and fire once.  A
+        stack that widens — any dense member, or a union past the
+        crossover — expands to factor pairs and rides the ordinary
+        batched path, whose per-update poisoning/admission semantics it
+        then inherits verbatim."""
+        carriers = [x if isinstance(x, DeltaCarrier)
+                    else as_carrier(x[0], x[1]) for x in updates]
+        live = [c for c in carriers if c.kind != "noop"]
+        skipped = len(carriers) - len(live)
+        self.stats.noop_skips += skipped
+        self.stats.updates_applied += skipped
+        if not live:
+            if block:
+                jax.block_until_ready(self.views)
+            return self.views
+        probe = stack_carriers(live)
+        if not (probe.kind == "row_local"
+                and self._rowlocal_ok(input_name, probe)):
+            self.stats.widened_carriers += \
+                sum(1 for c in live if c.kind == "row_local")
+            return self.apply_updates(input_name,
+                                      [c.factors() for c in live],
+                                      block=block)
+        # row-local fast path: poison each member compactly (one chaos
+        # gate per logical update — the same draw count as the dense
+        # batched path), restack, optionally re-compress the compact
+        # factors (QR touches only the r affected rows, so the row
+        # support is preserved exactly), then one row-slab firing
+        if self.chaos is not None:
+            repl = []
+            for c in live:
+                Bp, Vp = self.chaos.poison_update(c.block, c.V)
+                repl.append(RowLocalCarrier(
+                    c.rows, np.asarray(Bp, np.float32),
+                    np.asarray(Vp, np.float32), c.n))
+            live = repl
+            probe = stack_carriers(live)
+        stacked = probe
+        if (self.max_batch_rank is not None
+                and stacked.rank > self.max_batch_rank):
+            B2, V2 = recompress_factors(stacked.block, stacked.V,
+                                        max_rank=self.max_batch_rank,
+                                        tol=self.recompress_tol)
+            stacked = RowLocalCarrier(stacked.rows,
+                                      np.asarray(B2, np.float32),
+                                      np.asarray(V2, np.float32),
+                                      stacked.n)
+            self.stats.recompressions += 1
+        return self._apply_rowlocal(input_name, stacked, block=block,
+                                    t_count=len(live), poisoned=True)
+
     # -- batched incremental path ---------------------------------------------
     def apply_updates(self, input_name: str,
                       updates: Sequence[Tuple[Array, Array]],
@@ -921,6 +1233,9 @@ class IncrementalEngine:
             raise KeyError(f"no trigger for input {input_name!r}; have "
                            f"{sorted(self.compiled.triggers)}")
         updates = list(updates)
+        if any(isinstance(x, DeltaCarrier) for x in updates):
+            return self._apply_carrier_batch(input_name, updates,
+                                             block=block)
         if self.chaos is not None:
             updates = [self.chaos.poison_update(u, v) for u, v in updates]
         if not updates:
@@ -999,12 +1314,23 @@ class IncrementalEngine:
                    in self._factored_view_costs(input_name))
 
     def _observe_firing(self, input_name: str, stacked_rank: int,
-                        t_count: int) -> None:
+                        t_count: int,
+                        affected_fraction: Optional[float] = None) -> None:
         """Report one firing to the attached adaptive planner (both the
-        per-update and the batched path), adopting a re-plan if due."""
+        per-update and the batched path), adopting a re-plan if due.
+        Row-local firings also report their affected fraction, which
+        the adaptive planner folds into the observed workload; a custom
+        planner whose ``observe`` predates the kwarg still works."""
         if self.planner is None:
             return
-        self.planner.observe(input_name, stacked_rank, t_count)
+        if affected_fraction is not None:
+            try:
+                self.planner.observe(input_name, stacked_rank, t_count,
+                                     affected_fraction=affected_fraction)
+            except TypeError:
+                self.planner.observe(input_name, stacked_rank, t_count)
+        else:
+            self.planner.observe(input_name, stacked_rank, t_count)
         if hasattr(self.planner, "refit_from_stats"):
             self.planner.refit_from_stats(self.stats)
         new_plan = self.planner.maybe_replan()

@@ -2,7 +2,9 @@
 update-stream generators used by the IVM benchmarks."""
 
 from .pipeline import TokenPipeline, make_batch_specs, synth_batch
-from .updates import UpdateStream, zipf_row_stream
+from .updates import (RowLocalStream, UpdateStream, row_local_stream,
+                      zipf_row_stream)
 
 __all__ = ["TokenPipeline", "make_batch_specs", "synth_batch",
-           "UpdateStream", "zipf_row_stream"]
+           "UpdateStream", "RowLocalStream", "row_local_stream",
+           "zipf_row_stream"]

@@ -101,7 +101,8 @@ class FleetScheduler:
         # every claimable tenant on every claim, so memoize per
         # (tenant, input, rank, order-signature) — pure in the program
         # structure and the engine's resolved view depths
-        self._cost_memo: Dict[Tuple[str, str, int, tuple], float] = {}
+        self._cost_memo: Dict[Tuple[str, str, int, tuple, float],
+                              float] = {}
         self._any_degraded = False  # lets _apply_tier skip the scan
         # aggregate pending/capacity, maintained at append/prune time —
         # load() sits on every submit, so it must not scan the registry
@@ -131,28 +132,59 @@ class FleetScheduler:
         self.registry.unregister(tenant_id)
 
     # -- ingress -------------------------------------------------------------
-    def submit(self, tenant_id: str, input_name: str, u, v) -> str:
+    def submit(self, tenant_id: str, input_name: str, u, v=None) -> str:
         """Admit one update ``input ± u vᵀ`` into a tenant's log.
+
+        ``u`` may be a :class:`~repro.core.factored.DeltaCarrier`
+        (``v`` omitted): the log stores the carrier as-is, so a
+        row-local update replays through the row-slab trigger a crash
+        replay included, and a **no-op carrier is acknowledged without
+        ever entering the log** — nothing to fire, prune, or replay,
+        and it can never trip the overload tiers.
 
         Chaos poisoning happens HERE, before the log append, so the log
         stores the poisoned values and a crash-replay re-fires exactly
         what the first attempt saw.  Returns the admission decision
         (``"admitted"``/``"throttled"``/``"queue_full"``/``"shed"``).
         """
+        from repro.core.factored import (DeltaCarrier, LowRankCarrier,
+                                         RowLocalCarrier, as_carrier)
+        carrier = None
+        if isinstance(u, DeltaCarrier) or v is None:
+            carrier = as_carrier(u, v)
         tenant = self.registry.get(tenant_id)
         if input_name not in tenant.engine.compiled.triggers:
             raise KeyError(
                 f"no trigger for input {input_name!r} in tenant "
                 f"{tenant_id!r}; have "
                 f"{sorted(tenant.engine.compiled.triggers)}")
-        if self.chaos is not None:
-            u, v = self.chaos.poison_update(u, v)
         tenant.stats.submitted += 1
+        if carrier is not None and carrier.kind == "noop":
+            # nothing will ever move: ack before admission — a no-op
+            # consumes no queue slot, so throttling/shedding it is
+            # meaningless (and a storm of them must not degrade anyone)
+            tenant.stats.noop_skips += 1
+            tenant.stats.count(ADMITTED)
+            return ADMITTED
+        if self.chaos is not None:
+            if carrier is None:
+                u, v = self.chaos.poison_update(u, v)
+            elif carrier.kind == "row_local":
+                Bp, Vp = self.chaos.poison_update(carrier.block, carrier.V)
+                carrier = RowLocalCarrier(carrier.rows,
+                                          np.asarray(Bp, np.float32),
+                                          np.asarray(Vp, np.float32),
+                                          carrier.n)
+            else:
+                Pp, Qp = self.chaos.poison_update(*carrier.factors())
+                carrier = LowRankCarrier(np.asarray(Pp, np.float32),
+                                         np.asarray(Qp, np.float32))
         tier = self.tier()
         decision = self.admission.admit(tenant, tier)
         tenant.stats.count(decision)
         if decision == ADMITTED:
-            tenant.log.append(input_name, u, v, self._clock())
+            tenant.log.append(input_name, u, v, self._clock(),
+                              carrier=carrier)
             with self._load_lock:
                 self._pending_total += 1
             tier = self.tier()  # the append may have tipped it
@@ -217,12 +249,19 @@ class FleetScheduler:
         self._any_degraded = any_degraded
 
     # -- SLO-aware priority ---------------------------------------------------
-    def _pending_ranks(self, tenant: Tenant) -> Dict[str, int]:
-        ranks: Dict[str, int] = {}
+    def _pending_ranks(self, tenant: Tenant
+                       ) -> Dict[str, Tuple[int, float]]:
+        """Per pending input: (stacked rank, affected fraction).  The
+        fraction is the summed row containment of the pending carriers
+        clamped at 1.0 — a queue of row-local updates prices at the
+        row-slab sweep, and one dense entry drops the whole input back
+        to full price (dense entries report fraction 1.0)."""
+        acc: Dict[str, Tuple[int, float]] = {}
         for e in tenant.log.pending(tenant.applied_lsn):
-            k = e.u.shape[1] if e.u.ndim == 2 else 1
-            ranks[e.input_name] = ranks.get(e.input_name, 0) + k
-        return ranks
+            k, f = acc.get(e.input_name, (0, 0.0))
+            acc[e.input_name] = (k + e.rank,
+                                 min(1.0, f + e.affected_fraction()))
+        return acc
 
     def priority(self, tenant: Tenant) -> float:
         """``spec.priority × SLO-pressure / firing cost`` — cheap overdue
@@ -239,14 +278,21 @@ class FleetScheduler:
                   for n, o in (getattr(eng, "_view_orders", None) or
                                {}).items() if o > 1} or None
         order_sig = (tuple(sorted(orders.items())) if orders else ())
-        for input_name, rank in self._pending_ranks(tenant).items():
+        for input_name, (rank, frac) in self._pending_ranks(tenant).items():
             rank = min(rank, tenant.spec.max_claim_rank)
-            key = (tenant.spec.tenant_id, input_name, rank, order_sig)
+            # quantize the fraction so the memo stays finite; dense
+            # pending work (frac == 1.0) prices with fraction=None —
+            # identical to the pre-carrier key, so the memo carries over
+            fq = round(min(1.0, max(frac, 1e-4)), 4)
+            frac_arg = None if fq >= 1.0 else fq
+            key = (tenant.spec.tenant_id, input_name, rank, order_sig,
+                   fq)
             c = self._cost_memo.get(key)
             if c is None:
                 c = firing_cost_flops(eng.compiled, eng.binding,
                                       input_name, rank,
-                                      view_orders=orders)
+                                      view_orders=orders,
+                                      affected_fraction=frac_arg)
                 self._cost_memo[key] = c
             cost += c
         score = tenant.spec.priority * max(pressure, 1e-6) / cost
@@ -297,7 +343,7 @@ class FleetScheduler:
         total = 0
         target = tenant.applied_lsn
         for e in tenant.log.pending(tenant.applied_lsn):
-            k = e.u.shape[1] if e.u.ndim == 2 else 1
+            k = e.rank
             if total and total + k > tenant.spec.max_claim_rank:
                 break
             if groups and groups[-1][0] == e.input_name:
@@ -343,10 +389,8 @@ class FleetScheduler:
                 # cold-tier path: fold the raw deltas into the inputs,
                 # re-evaluate once — no trigger sweeps
                 for e in entries:
-                    delta = (e.u @ e.v.T if e.u.ndim == 2
-                             else np.outer(e.u, e.v))
                     engine.views[e.input_name] = (
-                        engine.views[e.input_name] + delta)
+                        engine.views[e.input_name] + e.dense_delta())
                 engine.reevaluate()
                 tenant.stats.reeval_on_read += 1
                 committed_groups.append(
@@ -355,7 +399,7 @@ class FleetScheduler:
                 for input_name, group in groups:
                     before = dict(engine.views)
                     engine.apply_updates(
-                        input_name, [(e.u, e.v) for e in group])
+                        input_name, [e.payload() for e in group])
                     if self.chaos is not None \
                             and self.chaos.should_crash_worker():
                         self.worker_crashes += 1

@@ -59,13 +59,44 @@ class TenantSpec:
 
 @dataclass
 class LogEntry:
-    """One admitted update, totally ordered by per-tenant LSN."""
+    """One admitted update, totally ordered by per-tenant LSN.
+
+    Either a raw ``(u, v)`` factor pair, or a
+    :class:`~repro.core.factored.DeltaCarrier` (``carrier`` set, ``u`` /
+    ``v`` ``None``) — the log stores whichever form was submitted, so a
+    crash replay re-fires the *same representation* the first attempt
+    saw (a row-local carrier replays through the row-slab trigger, not
+    a widened dense sweep — bit-identity demands the same code path)."""
 
     lsn: int
     input_name: str
-    u: np.ndarray
-    v: np.ndarray
+    u: Optional[np.ndarray]
+    v: Optional[np.ndarray]
     submitted_at: float
+    carrier: Optional[object] = None
+
+    @property
+    def rank(self) -> int:
+        """Stacked-rank contribution of this entry (claim capping)."""
+        if self.carrier is not None:
+            return max(1, int(self.carrier.rank))
+        return self.u.shape[1] if self.u.ndim == 2 else 1
+
+    def affected_fraction(self) -> float:
+        return (self.carrier.affected_fraction()
+                if self.carrier is not None else 1.0)
+
+    def payload(self):
+        """What the engine applies: the carrier, or the raw pair."""
+        return self.carrier if self.carrier is not None else (self.u, self.v)
+
+    def dense_delta(self) -> np.ndarray:
+        """``ΔA`` as a dense array (cold-tier reeval-on-read fold)."""
+        if self.carrier is not None:
+            P, Q = self.carrier.factors()
+            return P @ Q.T
+        return (self.u @ self.v.T if self.u.ndim == 2
+                else np.outer(self.u, self.v))
 
 
 class UpdateLog:
@@ -84,12 +115,16 @@ class UpdateLog:
         self.appended = 0
         self.pruned = 0
 
-    def append(self, input_name: str, u: np.ndarray, v: np.ndarray,
-               now: float) -> LogEntry:
+    def append(self, input_name: str, u, v, now: float,
+               carrier=None) -> LogEntry:
         with self._lock:
-            entry = LogEntry(self._next_lsn, input_name,
-                             np.asarray(u, dtype=np.float32),
-                             np.asarray(v, dtype=np.float32), now)
+            if carrier is not None:
+                entry = LogEntry(self._next_lsn, input_name, None, None,
+                                 now, carrier=carrier)
+            else:
+                entry = LogEntry(self._next_lsn, input_name,
+                                 np.asarray(u, dtype=np.float32),
+                                 np.asarray(v, dtype=np.float32), now)
             self._next_lsn += 1
             self._entries.append(entry)
             self.appended += 1
@@ -162,6 +197,7 @@ class TenantStats:
     reads: int = 0
     dirty_reads: int = 0        # reads served while pending work existed
     reeval_on_read: int = 0     # cold-tier degraded refreshes
+    noop_skips: int = 0         # no-op carriers acked without logging
 
     def count(self, decision: str) -> None:
         self.decisions[decision] = self.decisions.get(decision, 0) + 1

@@ -32,12 +32,12 @@ from .sentinel import DriftSentinel, SentinelConfig
 from .txn import (FiringAborted, FiringSnapshot, changed_views,
                   check_finite, restore_snapshot, take_snapshot)
 from .validate import (QuarantinedUpdate, QuarantineQueue, ValidationPolicy,
-                       validate_update)
+                       validate_carrier, validate_update)
 
 __all__ = [
     "GuardConfig", "GuardStats", "EngineGuard",
     "ValidationPolicy", "QuarantineQueue", "QuarantinedUpdate",
-    "validate_update",
+    "validate_update", "validate_carrier",
     "FiringAborted", "FiringSnapshot", "take_snapshot", "restore_snapshot",
     "changed_views", "check_finite",
     "SentinelConfig", "DriftSentinel",
@@ -78,6 +78,8 @@ class GuardStats:
 
     admitted: int = 0
     quarantined: int = 0
+    noop_skips: int = 0          # updates dropped by the no-op gate (legal
+                                 # skips, NOT faults — never quarantined)
     aborted_firings: int = 0
     rollbacks: int = 0
     probes: int = 0
@@ -140,6 +142,8 @@ class EngineGuard:
         u = np.asarray(u)
         v = np.asarray(v)
         policy = self.config.validation
+        if policy.noop_tol > 0.0 and self._noop_gate(u, v):
+            return None
         if defer_finite and policy.max_norm is None:
             policy = self._structural_policy
         reason = validate_update(input_name, u, v,
@@ -165,7 +169,10 @@ class EngineGuard:
         trigger."""
         policy = self.config.validation
         if (policy.max_norm is not None
-                or policy.max_update_rank is not None or not updates):
+                or policy.max_update_rank is not None
+                or policy.noop_tol > 0.0 or not updates):
+            # budgets and the no-op gate need per-update values — the
+            # careful walk applies them one update at a time
             return None
         n, m = self._input_shapes[input_name]
         try:
@@ -187,6 +194,54 @@ class EngineGuard:
             return None
         self.stats.admitted += len(updates)
         return P, Q
+
+    def _noop_gate(self, u: np.ndarray, v: np.ndarray) -> bool:
+        """The no-op gate (runs BEFORE quarantine screening): an update
+        whose delta norm bound sits under ``policy.noop_tol`` is a legal
+        skip, not a fault — it must never land in quarantine, where an
+        operator would read it as an anomaly.  Sound by construction:
+        ``‖u‖_F·‖v‖_F ≥ ‖u vᵀ‖_F`` bounds how far ANY maintained view
+        can move, and a NaN/Inf norm fails the ``<=`` so poisoned
+        updates fall through to the finite screen instead of being
+        silently dropped."""
+        norm = float(np.linalg.norm(u)) * float(np.linalg.norm(v))
+        if norm <= self.config.validation.noop_tol:
+            self.stats.noop_skips += 1
+            return True
+        return False
+
+    def admit_carrier(self, input_name: str, rows, block, v,
+                      count: int = 1) -> Optional[Tuple[np.ndarray,
+                                                        np.ndarray]]:
+        """Admission for a row-local carrier in compact form: the no-op
+        gate, then :func:`validate_carrier` — structure, NaN/Inf, and
+        the rank/norm budgets, all computed on the ``(r, k)`` block so
+        admission cost scales with the rows *touched*.  On reject the
+        factors are quarantined widened (dense-shaped ``(P, Q)``) when
+        the row structure permits, so :meth:`QuarantineQueue.replay`
+        rides the ordinary update path; ``count`` is the logical update
+        count a stacked carrier batch represents."""
+        rows = np.asarray(rows)
+        block = np.asarray(block)
+        v = np.asarray(v)
+        policy = self.config.validation
+        if policy.noop_tol > 0.0 and self._noop_gate(block, v):
+            return None
+        reason = validate_carrier(input_name, rows, block, v,
+                                  self._input_shapes[input_name], policy)
+        if reason is not None:
+            try:  # widen for replay; malformed rows keep the compact form
+                n = self._input_shapes[input_name][0]
+                P = np.zeros((n, block.shape[1]), np.float32)
+                P[rows.astype(np.int64)] = block
+                qu = P
+            except Exception:  # noqa: BLE001
+                qu = block
+            self.quarantine.put(input_name, qu, v, reason)
+            self.stats.quarantined += 1
+            return None
+        self.stats.admitted += count
+        return block, v
 
     def admit_batch(self, input_name: str, updates) -> list:
         """Careful per-update batch admission: full
@@ -306,6 +361,34 @@ class EngineGuard:
             if engine.chaos is not None:
                 engine.chaos.maybe_raise_in_trigger()
             engine._fire_inner(input_name, bucket, P, Q)
+            reason = self.validate_outputs(snap, engine.views)
+            if reason is not None:
+                raise FiringAborted(reason, input_name, "validate")
+        except FiringAborted:
+            restore_snapshot(engine, snap)
+            self.stats.rollbacks += 1
+            raise
+        except Exception as e:  # noqa: BLE001 — any kernel error rolls back
+            restore_snapshot(engine, snap)
+            self.stats.rollbacks += 1
+            raise FiringAborted(repr(e), input_name, "execute") from e
+
+    def fire_rowlocal(self, engine, input_name: str, fn, rows, block,
+                      v) -> None:
+        """Transactional row-slab firing.  Always the snapshot path —
+        the fused select-commit program is keyed to dense ``(P, Q)``
+        triggers and a row-local firing is already cheap enough that a
+        snapshot's O(changed bytes) cost doesn't dominate it."""
+        if not self.config.transactional:
+            if engine.chaos is not None:
+                engine.chaos.maybe_raise_in_trigger()
+            engine.views = fn(engine.views, rows, block, v)
+            return
+        snap = take_snapshot(engine)
+        try:
+            if engine.chaos is not None:
+                engine.chaos.maybe_raise_in_trigger()
+            engine.views = fn(engine.views, rows, block, v)
             reason = self.validate_outputs(snap, engine.views)
             if reason is not None:
                 raise FiringAborted(reason, input_name, "validate")

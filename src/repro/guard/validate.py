@@ -26,16 +26,25 @@ class ValidationPolicy:
 
     ``max_norm`` bounds ``‖u‖_F · ‖v‖_F`` — an upper bound on the
     Frobenius norm of the applied delta ``u vᵀ`` — so one oversized
-    update cannot blow a float32 view past overflow even when every
+    update cannot blow a float32 view past overflow even though every
     entry is individually finite.  ``check_outputs`` belongs to the
     transactional layer (:mod:`repro.guard.txn`): post-firing NaN/Inf
     validation of every written view before the firing commits.
+
+    ``noop_tol`` enables the no-op gate: an update whose delta norm
+    bound ``‖u‖_F·‖v‖_F`` is at most ``noop_tol`` is *skipped* — no
+    firing, no quarantine (it is a legal no-op, not a fault; counted in
+    ``GuardStats.noop_skips``).  The bound dominates the true delta
+    norm, so the gate can never skip an update that would move any view
+    by more than ``noop_tol`` (a NaN norm fails the comparison and
+    falls through to the finite screen).
     """
 
     check_finite: bool = True
     check_outputs: bool = True
     max_update_rank: Optional[int] = None
     max_norm: Optional[float] = None
+    noop_tol: float = 0.0
 
 
 def validate_update(input_name: str, u: np.ndarray, v: np.ndarray,
@@ -73,6 +82,61 @@ def validate_update(input_name: str, u: np.ndarray, v: np.ndarray,
     if policy.max_norm is not None:
         norm = float(np.linalg.norm(u)) * float(np.linalg.norm(v))
         if not norm <= policy.max_norm:  # catches NaN too
+            return (f"{input_name}: delta norm bound {norm:.3e} exceeds "
+                    f"budget {policy.max_norm:.3e}")
+    return None
+
+
+def validate_carrier(input_name: str, rows: np.ndarray, block: np.ndarray,
+                     v: np.ndarray, input_shape: Tuple[int, int],
+                     policy: ValidationPolicy) -> Optional[str]:
+    """Admission check for a row-local carrier in *compact* form.
+
+    The same budgets as :func:`validate_update`, restated on the
+    ``(rows, block, V)`` triple so admission never materializes the
+    dense-shaped left factor: structure (row indices sorted, unique,
+    in-range; block rows match), dtype, NaN/Inf, and the rank/norm
+    budgets (``‖block‖_F·‖V‖_F`` equals the widened bound exactly —
+    the scattered zeros contribute nothing).
+    """
+    n, m = input_shape
+    rows = np.asarray(rows)
+    block = np.asarray(block)
+    v = np.asarray(v)
+    if rows.ndim != 1 or block.ndim != 2 or v.ndim != 2:
+        return (f"{input_name}: carrier dims — rows.ndim={rows.ndim} "
+                f"block.ndim={block.ndim} v.ndim={v.ndim}")
+    if rows.dtype.kind not in "iu":
+        return f"{input_name}: carrier rows must be integral, got {rows.dtype}"
+    if rows.size == 0:
+        return f"{input_name}: row-local carrier with empty row set"
+    if rows.min() < 0 or rows.max() >= n:
+        return (f"{input_name}: carrier rows out of range [0, {n}) "
+                f"(min {rows.min()}, max {rows.max()})")
+    if np.any(np.diff(rows) <= 0):
+        return f"{input_name}: carrier rows must be sorted and unique"
+    if block.shape[0] != rows.size:
+        return (f"{input_name}: block rows {block.shape[0]} != affected "
+                f"rows {rows.size}")
+    if v.shape[0] != m:
+        return (f"{input_name}: right factor rows {v.shape[0]} do not "
+                f"match input columns {m}")
+    if block.shape[1] != v.shape[1]:
+        return (f"{input_name}: factor ranks disagree "
+                f"({block.shape[1]} != {v.shape[1]})")
+    if block.dtype.kind != "f" or v.dtype.kind != "f":
+        return (f"{input_name}: factors must be floating point, got "
+                f"{block.dtype}/{v.dtype}")
+    if (policy.max_update_rank is not None
+            and block.shape[1] > policy.max_update_rank):
+        return (f"{input_name}: rank {block.shape[1]} exceeds budget "
+                f"{policy.max_update_rank}")
+    if policy.check_finite and not (np.isfinite(block).all()
+                                    and np.isfinite(v).all()):
+        return f"{input_name}: non-finite entries in update factors"
+    if policy.max_norm is not None:
+        norm = float(np.linalg.norm(block)) * float(np.linalg.norm(v))
+        if not norm <= policy.max_norm:
             return (f"{input_name}: delta norm bound {norm:.3e} exceeds "
                     f"budget {policy.max_norm:.3e}")
     return None

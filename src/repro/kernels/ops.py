@@ -20,6 +20,7 @@ from .dual_matmul import dual_matmul_pallas
 from .flash_attention import flash_attention_pallas
 from .flash_decode import flash_decode_pallas
 from .rank_update import rank_update_batched_pallas, rank_update_pallas
+from .rank_update_rows import rank_update_rows_pallas, rank_update_rows_ref
 
 VMEM_BUDGET = 12 * 1024 * 1024  # bytes we allow a kernel's working set
 
@@ -111,6 +112,75 @@ def rank_update_batched(m: jax.Array, u: jax.Array, v: jax.Array,
         return ref.rank_update_batched(m, u, v)  # ragged fallback
     return rank_update_batched_pallas(m, u, v, bm=bm, bn=bn,
                                       interpret=_interpret_default(interpret))
+
+
+def slab_plan(n: int, rows, *, max_fraction: float = 0.25
+              ) -> Optional[Tuple[int, "jnp.ndarray"]]:
+    """Host-side slab plan for a row-local sweep: ``(slab, slab_ids)``.
+
+    Groups the affected rows (concrete, host-visible indices) into
+    ``slab``-row blocks and pads the touched-slab id list to a power-of-
+    two bucket with **distinct untouched** slab ids, so repeated row
+    patterns reuse one compiled kernel per bucket and the aliased
+    in-place write stays order-independent (each slab visited once).
+    Returns ``None`` when the slab sweep cannot win — touched fraction
+    above ``max_fraction`` after padding, or too few untouched slabs to
+    pad with — and the caller should take the dense kernel instead.
+    """
+    import numpy as np
+    rows = np.asarray(rows)
+    if rows.size == 0:
+        return None
+    slab = _pick_block(n, 256)
+    if slab >= n:
+        return None
+    ids = np.unique(rows // slab)
+    bucket = 1 << (int(ids.size) - 1).bit_length()
+    num_slabs = n // slab
+    if bucket * slab > max_fraction * n or bucket > num_slabs:
+        return None
+    if bucket > ids.size:
+        touched = np.zeros(num_slabs, dtype=bool)
+        touched[ids] = True
+        free = np.flatnonzero(~touched)[:bucket - ids.size]
+        if free.size < bucket - ids.size:
+            return None
+        ids = np.concatenate([ids, free])
+    return slab, jnp.asarray(ids.astype(np.int32))
+
+
+def rank_update_rows(m: jax.Array, rows, block, v: jax.Array,
+                     *, max_fraction: float = 0.25,
+                     interpret: Optional[bool] = None) -> jax.Array:
+    """Row-local rank-k view update: ``m + scatter(rows, block) @ v.T``.
+
+    ``rows`` (r,) are the affected row indices (host-concrete), ``block``
+    (r, k) the compact left factor, ``v`` (p, k).  Sweeps only the
+    touched row slabs through the Pallas kernel — HBM traffic scales
+    with r, not n — and falls back to the dense batched kernel when the
+    affected fraction exceeds ``max_fraction`` (past the crossover the
+    slab gather costs more than it saves) or the shapes don't tile.
+    """
+    import numpy as np
+    n, p = m.shape
+    rows = np.asarray(rows)
+    block = jnp.asarray(block)
+    k = v.shape[1]
+    plan = slab_plan(n, rows, max_fraction=max_fraction)
+    dense_u = None
+    if plan is None:
+        dense_u = jnp.zeros((n, k), v.dtype).at[jnp.asarray(rows)].set(block)
+        return rank_update(m, dense_u, v, interpret=interpret)
+    slab, slab_ids = plan
+    bn = _pick_block(p, 512)
+    while 4 * (slab * bn + k * (slab + bn)) > VMEM_BUDGET and bn > 8:
+        bn = max(8, bn // 2)
+    if p % bn:
+        return rank_update_rows_ref(m, jnp.asarray(rows.astype(np.int32)),
+                                    block, v)
+    u = jnp.zeros((n, k), v.dtype).at[jnp.asarray(rows)].set(block)
+    return rank_update_rows_pallas(m, slab_ids, u, v, slab=slab, bn=bn,
+                                   interpret=_interpret_default(interpret))
 
 
 def dual_matmul(a: jax.Array, u: jax.Array, v: jax.Array,

@@ -42,6 +42,7 @@ class AdaptivePlanner:
         self.drift_tol = drift_tol
         self._ranks: Deque[int] = deque(maxlen=history)
         self._batches: Deque[int] = deque(maxlen=history)
+        self._fractions: Deque[float] = deque(maxlen=history)
         self._firings = 0
         self._reads = 0
         self._since_replan = 0
@@ -93,10 +94,19 @@ class AdaptivePlanner:
 
     # -- observation loop ----------------------------------------------------
     def observe(self, input_name: str, stacked_rank: int,
-                batch_size: int) -> None:
-        """Record one firing (pre-padding stacked rank, T updates)."""
+                batch_size: int,
+                affected_fraction: Optional[float] = None) -> None:
+        """Record one firing (pre-padding stacked rank, T updates).
+
+        ``affected_fraction`` is the firing's observed row containment
+        (``r/n`` for a row-local carrier, 1.0 for a dense firing) — the
+        fitted descriptor carries its p90, so a stream that turns out
+        contained re-prices row-local-closed views at the row-slab
+        sweep cost, and one that widens drops the discount."""
         self._ranks.append(max(1, int(stacked_rank)))
         self._batches.append(max(1, int(batch_size)))
+        self._fractions.append(1.0 if affected_fraction is None
+                               else min(1.0, max(0.0, affected_fraction)))
         self._firings += 1
         self._since_replan += 1
 
@@ -125,6 +135,13 @@ class AdaptivePlanner:
         k = max(1, round(q(ranks, 0.5) / t))
         fitted = replace(self.workload, update_rank=k, batch_size=t,
                          rank_lo=q(ranks, 0.1), rank_hi=q(ranks, 0.9))
+        if self._fractions:
+            # p90 (not mean): the discount must hold for the stream's
+            # wide tail, or the plan underprices its worst firings
+            frac = q(sorted(self._fractions), 0.9)
+            fitted = replace(fitted,
+                             affected_fraction=None if frac >= 1.0
+                             else max(frac, 1e-6))
         if self.workload.max_order >= 2 and self._firings > 0:
             fitted = replace(fitted,
                              reads_per_firing=self._reads / self._firings)

@@ -34,7 +34,8 @@ from typing import Dict, FrozenSet, List, Optional, Tuple
 from repro.core.codegen import trigger_touched_views
 from repro.core.compiler import CompiledProgram, compile_program
 from repro.core.cost import (batch_crossover_rank, batched_strategy,
-                             expr_cost, expr_cost_kinds, shape_of)
+                             expr_cost, expr_cost_kinds,
+                             rowlocal_crossover_fraction, shape_of)
 from repro.core.program import Program
 
 STRATEGIES = ("incremental", "reeval", "hybrid")
@@ -93,6 +94,13 @@ class WorkloadDescriptor:
     rank_lo: Optional[int] = None
     rank_hi: Optional[int] = None
     reads_per_firing: float = 1.0
+    # expected fraction of input rows one update touches (None = dense /
+    # unknown).  With a fraction set, views the compiler proved row-local
+    # (Trigger.carriers) are priced at the row-slab sweep cost — their
+    # effective §7 crossover scales by 1/fraction, so containment keeps
+    # incremental maintenance winning at stacked ranks where a dense
+    # sweep would already have crossed to re-evaluation.
+    affected_fraction: Optional[float] = None
     cost_scale: float = 1.0       # wall-clock per-FLOP cost of the sweep
     #                               relative to re-evaluation (calibrated)
     chain_aware: bool = False     # price the shared delta chain into sweeps
@@ -155,6 +163,12 @@ class ViewPlan:
     # window every fold_window**(o-1) firings (or at the next read)
     # instead of sweeping per firing
     order: int = 1
+    # row-local containment: True when the compiler proved this view's
+    # delta row-support-preserving under every trigger that maintains it
+    # AND the workload's affected fraction sits under the traffic
+    # crossover — its strategy above was priced at the row-slab sweep
+    # cost, and fleet firing pricing scales its sweep by the fraction
+    row_local: bool = False
 
     def __post_init__(self):
         if self.strategy not in STRATEGIES:
@@ -283,6 +297,22 @@ def _trigger_read_views(compiled: CompiledProgram) -> FrozenSet[str]:
     return frozenset(read)
 
 
+def _rowlocal_closed_views(compiled: CompiledProgram) -> FrozenSet[str]:
+    """Views whose delta is row-support-preserving under EVERY trigger
+    that maintains them in factored form (``Trigger.carriers`` —
+    compile-time §4 closure).  A view that is row-local under updates
+    to one input but widens under another cannot be priced at the
+    row-slab cost: the plan is per-view, not per-(view, input)."""
+    status: Dict[str, bool] = {}
+    for trig in compiled.triggers.values():
+        for up in trig.updates:
+            if up.kind != "lowrank":
+                continue
+            ok = trig.carriers.get(up.view) == "row_local"
+            status[up.view] = status.get(up.view, True) and ok
+    return frozenset(n for n, ok in status.items() if ok)
+
+
 def plan_program(compiled, workload: WorkloadDescriptor, *,
                  binding: Optional[Dict[str, int]] = None,
                  mesh=None, mesh_axis: Optional[str] = None
@@ -324,6 +354,8 @@ def plan_program(compiled, workload: WorkloadDescriptor, *,
     lo, hi = workload.rank_bounds()
     outputs = set(program.output_names())
     never_lazy = _trigger_read_views(compiled) | outputs | set(program.inputs)
+    rl_closed = _rowlocal_closed_views(compiled)
+    frac = workload.affected_fraction
 
     views: Dict[str, ViewPlan] = {}
     shapes: Dict[str, Tuple[int, int]] = {}
@@ -337,7 +369,18 @@ def plan_program(compiled, workload: WorkloadDescriptor, *,
         reeval_eff = workload.effective_reeval_flops(
             expr_cost_kinds(st.expr, binding))
         kstar = batch_crossover_rank(shape, reeval_eff)
-        k_eff = max(1, int(kstar / max(workload.cost_scale, 1e-12)))
+        # cardinality-based selection: a row-local-closed view under a
+        # contained workload sweeps only frac·n rows, so its effective
+        # crossover (both against cost_scale AND the hybrid threshold)
+        # scales by 1/frac — incremental keeps winning at ranks where
+        # the dense sweep would already re-evaluate
+        row_local = (frac is not None and name in rl_closed
+                     and 0.0 < frac
+                     and frac <= rowlocal_crossover_fraction(
+                         shape, workload.expected_rank()))
+        kstar_rl = kstar if not row_local else \
+            max(kstar, int(kstar / max(frac, 1e-9)))
+        k_eff = max(1, int(kstar_rl / max(workload.cost_scale, 1e-12)))
         if hi < k_eff:
             strat, thr = "incremental", None
         elif lo >= k_eff:
@@ -348,7 +391,8 @@ def plan_program(compiled, workload: WorkloadDescriptor, *,
         if name not in never_lazy:
             n, m = shape
             k = workload.expected_rank()
-            maintain = 2.0 * k * n * m                 # per-firing sweep
+            sweep_rows = n * frac if row_local else n
+            maintain = 2.0 * k * sweep_rows * m        # per-firing sweep
             on_demand = workload.reads_per_firing * reeval_eff
             materialize = maintain <= on_demand
         # every statement view is depth-eligible; _resolve_depths then
@@ -359,7 +403,7 @@ def plan_program(compiled, workload: WorkloadDescriptor, *,
         views[name] = ViewPlan(view=name, strategy=strat,
                                threshold_rank=thr, materialize=materialize,
                                crossover_rank=kstar, reeval_flops=reeval,
-                               order=order)
+                               order=order, row_local=row_local)
     if workload.chain_aware:
         _reprice_with_chain(compiled, binding, workload, lo, hi,
                             views, shapes, reeval_effs)
@@ -522,7 +566,8 @@ def firing_cost_flops(compiled: CompiledProgram, binding: Dict[str, int],
                       input_name: str, stacked_rank: int, *,
                       reeval_views: FrozenSet[str] = frozenset(),
                       workload: Optional[WorkloadDescriptor] = None,
-                      view_orders: Optional[Dict[str, int]] = None
+                      view_orders: Optional[Dict[str, int]] = None,
+                      affected_fraction: Optional[float] = None
                       ) -> float:
     """Planner-estimated FLOPs of one trigger firing at ``stacked_rank``.
 
@@ -543,10 +588,18 @@ def firing_cost_flops(compiled: CompiledProgram, binding: Dict[str, int],
     sweep, and keeps none of the delta chain alive per firing.
     Chain-aware fleet pricing would otherwise overcharge higher-order
     tenants by exactly the factor their depth buys back.
+
+    ``affected_fraction`` (a row-local firing's ``r/n``, or the
+    workload's expectation) scales the sweep of every view the compiler
+    proved row-local under this trigger — the fleet's lease pricing
+    must see the contained cost, or sparse tenants get overcharged by
+    ``1/fraction`` and starve dense tenants of their fair share.
     """
     trig = compiled.triggers[input_name]
     assign_flops, view_deps = trigger_chain_costs(trig, binding)
     scale = workload.cost_scale if workload is not None else 1.0
+    if affected_fraction is None and workload is not None:
+        affected_fraction = workload.affected_fraction
     fold_window = workload.fold_window if workload is not None else 8
     max_fold_rank = workload.max_fold_rank if workload is not None else 64
     k = max(1, int(stacked_rank))
@@ -575,7 +628,11 @@ def firing_cost_flops(compiled: CompiledProgram, binding: Dict[str, int],
         target = st.target if st is not None \
             else compiled.program.inputs[up.view]
         n, m = shape_of(target, binding)
-        total += scale * 2.0 * k * n * m
+        rows = n
+        if (affected_fraction is not None
+                and trig.carriers.get(up.view) == "row_local"):
+            rows = max(1.0, affected_fraction * n)
+        total += scale * 2.0 * k * rows * m
         live_assigns |= view_deps[up.view]
     total += scale * sum(assign_flops[a] for a in live_assigns) \
         * (k / max(trig.rank, 1))
