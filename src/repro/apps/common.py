@@ -74,3 +74,41 @@ class App:
         """Analytic FLOP ratio reeval/incremental for one update."""
         return (self.engine.reeval_flops() /
                 max(self.engine.trigger_flops(self.update_input), 1.0))
+
+
+# ---------------------------------------------------------------------------
+# app discovery
+# ---------------------------------------------------------------------------
+
+_APP_REGISTRY: Dict[str, type] = {}
+
+
+def register_app(name: str, factory: Optional[type] = None):
+    """Register an app factory under ``name`` so drivers enumerate it.
+
+    Usable as a decorator (``@register_app("ols")``) or a direct call
+    (``register_app("ols", OLS)``).  ``launch/serve.py`` and the
+    benchmarks look apps up here instead of hand-wiring imports —
+    adding an app module plus one ``register_app`` line makes it
+    discoverable everywhere.
+    """
+    def _register(f):
+        _APP_REGISTRY[name] = f
+        return f
+    if factory is not None:
+        return _register(factory)
+    return _register
+
+
+def get_app(name: str) -> type:
+    """The registered factory for ``name`` (KeyError lists what's
+    available)."""
+    try:
+        return _APP_REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown app {name!r}; available: "
+                       f"{available_apps()}") from None
+
+
+def available_apps() -> list:
+    return sorted(_APP_REGISTRY)

@@ -15,7 +15,8 @@ from .factored import (DeltaCarrier, DeltaRep, DenseDelta, HStack,
                        LowRank, LowRankCarrier, NoOpCarrier,
                        RowLocalCarrier, as_carrier, detect_row_local,
                        pad_factors_to_rank, recompress_factors,
-                       stack_carriers, stack_update_arrays)
+                       row_delta_carrier, stack_carriers,
+                       stack_update_arrays)
 from .delta import DeltaEnv, derive, derive_delta, IncrementalInverseError
 from .compiler import (Assign, CompiledProgram, DeltaView, Trigger,
                        ViewUpdate, batch_bucket, compile_batched_trigger,
@@ -24,7 +25,10 @@ from .compiler import (Assign, CompiledProgram, DeltaView, Trigger,
 from .codegen import build_evaluator, build_trigger_fn, evaluate
 from .runtime import EngineStats, IncrementalEngine, ReevalEngine, max_abs_diff
 from .cost import (Cost, batch_crossover_rank, batched_apply_cost,
-                   batched_strategy, expr_cost, lowrank_cost, recompress_cost)
+                   batched_strategy, cholesky_factor_cost,
+                   cholesky_update_cost, expr_cost, lowrank_cost,
+                   recompress_cost, solver_crossover_rank,
+                   triangular_solve_cost)
 from .sherman_morrison import (sherman_morrison, sherman_morrison_delta,
                                woodbury, woodbury_delta)
 from . import iterative
@@ -35,7 +39,7 @@ __all__ = [
     "Program", "Statement", "dim",
     "DeltaRep", "DenseDelta", "HStack", "LowRank",
     "DeltaCarrier", "LowRankCarrier", "RowLocalCarrier", "NoOpCarrier",
-    "as_carrier", "detect_row_local", "stack_carriers",
+    "as_carrier", "detect_row_local", "row_delta_carrier", "stack_carriers",
     "pad_factors_to_rank", "recompress_factors", "stack_update_arrays",
     "DeltaEnv", "derive", "derive_delta", "IncrementalInverseError",
     "Assign", "CompiledProgram", "DeltaView", "Trigger", "ViewUpdate",
@@ -44,7 +48,9 @@ __all__ = [
     "build_evaluator", "build_trigger_fn", "evaluate",
     "EngineStats", "IncrementalEngine", "ReevalEngine", "max_abs_diff",
     "Cost", "batch_crossover_rank", "batched_apply_cost", "batched_strategy",
-    "expr_cost", "lowrank_cost", "recompress_cost",
+    "cholesky_factor_cost", "cholesky_update_cost", "expr_cost",
+    "lowrank_cost", "recompress_cost", "solver_crossover_rank",
+    "triangular_solve_cost",
     "sherman_morrison", "sherman_morrison_delta", "woodbury",
     "woodbury_delta", "iterative",
 ]

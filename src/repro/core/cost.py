@@ -265,6 +265,42 @@ def rowlocal_crossover_fraction(view_shape: Tuple[int, int], rank: int,
 
 
 # ---------------------------------------------------------------------------
+# normal-equation solver costs (repro.fivm: models over the maintained ring)
+# ---------------------------------------------------------------------------
+
+
+def cholesky_factor_cost(n: int) -> Cost:
+    """Factoring ``A = L Lᵀ`` from scratch: n³/3 FLOPs over an (n, n)
+    SPD matrix (the re-solve path of a ridge/OLS model whose gram view
+    the ring maintains)."""
+    return Cost(float(n) ** 3 / 3.0, ELT * 2.0 * n * n)
+
+
+def cholesky_update_cost(n: int, rank: int) -> Cost:
+    """Rank-``rank`` Cholesky update/downdate: ``rank`` rank-1 passes at
+    ~2n² FLOPs each (Givens sweep over the triangle) — the incremental
+    re-solve path, priced against :func:`cholesky_factor_cost` exactly
+    like the §7 trigger-vs-reeval crossover."""
+    return Cost(2.0 * max(1, int(rank)) * float(n) * n,
+                ELT * (max(1, int(rank)) + 1.0) * n * n)
+
+
+def triangular_solve_cost(n: int, p: int) -> Cost:
+    """Two triangular solves ``L Lᵀ B = C`` for an (n, p) right-hand
+    side (paid identically by both re-solve strategies, so it cancels
+    out of the crossover but belongs in absolute refresh pricing)."""
+    return Cost(2.0 * float(n) * n * max(1, int(p)),
+                ELT * (n * n + 2.0 * n * max(1, int(p))))
+
+
+def solver_crossover_rank(n: int) -> int:
+    """Accumulated factor-update rank past which re-factoring beats
+    rank-1 update/downdate sweeps: solves ``2·K·n² ≥ n³/3`` for K —
+    the §7 crossover restated for the solver's triangular factor."""
+    return max(1, int(n / 6))
+
+
+# ---------------------------------------------------------------------------
 # asymptotic (Table 2) reports — used for docs/EXPERIMENTS, not decisions
 # ---------------------------------------------------------------------------
 

@@ -456,6 +456,15 @@ class DeltaCarrier:
         more than ``tol`` (in delta Frobenius norm)."""
         return self.norm_bound() <= tol
 
+    def negate(self) -> "DeltaCarrier":
+        """The downdate ``-ΔA``: applying a carrier then its negation is
+        the identity up to float cancellation (the F-IVM delete path —
+        a deletion is an insertion with negative weight).  Subclasses
+        override to preserve their compact representation."""
+        import numpy as np
+        P, Q = self.factors()
+        return LowRankCarrier(np.negative(P), Q)
+
 
 def _as_f32_factor(a, name: str) -> "np.ndarray":
     import numpy as np
@@ -490,6 +499,10 @@ class LowRankCarrier(DeltaCarrier):
     def norm_bound(self) -> float:
         import numpy as np
         return float(np.linalg.norm(self.P)) * float(np.linalg.norm(self.Q))
+
+    def negate(self) -> "LowRankCarrier":
+        import numpy as np
+        return LowRankCarrier(np.negative(self.P), self.Q)
 
 
 @dataclass(frozen=True)
@@ -563,6 +576,13 @@ class RowLocalCarrier(DeltaCarrier):
         W = np.asarray(W, dtype=np.float32)
         return RowLocalCarrier(self.rows, self.block, W.T @ self.V, self.n)
 
+    def negate(self) -> "RowLocalCarrier":
+        """Negation preserves row support — a delete carrier is exactly
+        as contained as the insert it cancels."""
+        import numpy as np
+        return RowLocalCarrier(self.rows, np.negative(self.block),
+                               self.V, self.n)
+
 
 @dataclass(frozen=True)
 class NoOpCarrier(DeltaCarrier):
@@ -594,6 +614,34 @@ class NoOpCarrier(DeltaCarrier):
 
     def is_noop(self, tol: float = 0.0) -> bool:
         return True
+
+    def negate(self) -> "NoOpCarrier":
+        return self
+
+
+def row_delta_carrier(rows, V, n: int, *, weight: float = 1.0
+                      ) -> RowLocalCarrier:
+    """The canonical F-IVM row tuple-update carrier: ``ΔA`` adds
+    ``weight · V[:, j]ᵀ`` to row ``rows[j]`` of an ``(n, m)`` input.
+
+    ``weight=+1`` is an insert (the row was zero), ``weight=-1`` the
+    matching delete/downdate — the negative-weight form the learning-
+    over-changing-data workloads (arXiv 1703.07484) maintain their
+    covariance ring under.  ``rows`` may be a scalar slot or a
+    duplicate-free index array; ``V`` is ``(m,)`` for one row or
+    ``(m, r)`` column-per-row for several.
+    """
+    import numpy as np
+    rows = np.atleast_1d(np.asarray(rows, dtype=np.int32))
+    V = np.asarray(V, dtype=np.float32)
+    if V.ndim == 1:
+        V = V[:, None]
+    if V.shape[1] != rows.size:
+        raise ex.ShapeError(f"row_delta_carrier: {rows.size} rows but "
+                            f"{V.shape[1]} value columns")
+    block = np.eye(rows.size, dtype=np.float32) * np.float32(weight)
+    order = np.argsort(rows)
+    return RowLocalCarrier(rows[order], block[order], V, n)
 
 
 def as_carrier(u, v=None) -> DeltaCarrier:

@@ -2,9 +2,11 @@
 update-stream generators used by the IVM benchmarks."""
 
 from .pipeline import TokenPipeline, make_batch_specs, synth_batch
-from .updates import (RowLocalStream, UpdateStream, row_local_stream,
+from .updates import (LabeledStream, LabeledUpdate, RowLocalStream,
+                      UpdateStream, labeled_stream, row_local_stream,
                       zipf_row_stream)
 
 __all__ = ["TokenPipeline", "make_batch_specs", "synth_batch",
            "UpdateStream", "RowLocalStream", "row_local_stream",
-           "zipf_row_stream"]
+           "zipf_row_stream", "LabeledStream", "LabeledUpdate",
+           "labeled_stream"]

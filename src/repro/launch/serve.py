@@ -18,6 +18,57 @@ from repro.serve import ServeEngine
 from .train import custom_10m, custom_100m
 
 
+def serve_fivm(args) -> None:
+    """Models-as-views serving (docs/fivm.md): data arrival and model
+    refresh are decoupled — ingest banks factored deltas into the
+    ring's deferred windows, each read folds and re-solves — and the
+    same ring shape runs as a fleet tenant so staleness is accounted
+    against the tenant SLO."""
+    from repro.apps import get_app
+    from repro.data import labeled_stream
+    from repro.fivm.registry import RingRegistry, submit_event
+    from repro.fleet import FleetConfig, FleetScheduler
+
+    app = get_app("fivm_learning")(
+        features=args.fivm_features, capacity=args.fivm_capacity,
+        order=2, churn=0.3)
+    app.ingest(8)
+    app.refresh()          # compile + first solve outside the ledger
+    out = app.serve_demo(bursts=args.fivm_bursts,
+                         burst_size=args.fivm_burst_size)
+    print(f"[serve] fivm decoupled ring: {out['events']} events "
+          f"({out['live']:.0f} live), "
+          f"ingest {out['ingest_us_per_event']:.0f} us/event, "
+          f"reads {[f'{t:.1f}ms' for t in out['read_ms']]}, "
+          f"folds={out['folds']} strategies={out['strategies']}")
+
+    # fleet-hosted ring tenant: same carriers, lease-claimed refresh,
+    # SLO staleness accounting
+    spec = app.spec
+    fleet = FleetScheduler(FleetConfig(lease_ttl=0.5,
+                                       workers=args.fleet_workers))
+    reg = RingRegistry()
+    reg.add_fleet_tenant(fleet, spec, "fivm-ring", slo_s=0.5)
+    stream = labeled_stream(spec.features, targets=spec.targets,
+                            capacity=spec.capacity, churn=0.3, seed=1)
+    fleet.start()
+    try:
+        t0 = time.perf_counter()
+        n = args.fivm_bursts * args.fivm_burst_size
+        for ev in stream.events(n):
+            submit_event(fleet, "fivm-ring", spec.capacity, ev)
+        fleet.drain(["fivm-ring"])
+        dt = time.perf_counter() - t0
+        G = fleet.read_views("fivm-ring")["G"]
+        health = fleet.tenant_health()[0]
+        print(f"[serve] fivm fleet tenant: {n} events in {dt:.2f}s "
+              f"({3 * n / dt:.0f} firings/s), G={tuple(G.shape)}, "
+              f"staleness={health['staleness_s']:.3f}s "
+              f"(slo={health['slo_s']}s) health={health}")
+    finally:
+        fleet.stop()
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="custom-10m")
@@ -39,7 +90,21 @@ def main():
                          "workers, admission control, shared trigger "
                          "cache; prints fleet health + stats")
     ap.add_argument("--fleet-workers", type=int, default=2)
+    ap.add_argument("--fivm", action="store_true",
+                    help="serve the repro.fivm learning views instead "
+                         "of token generation: a maintained gram ring "
+                         "in decoupled (order=2, bank-on-ingest, "
+                         "fold-on-read) mode, plus a fleet-hosted ring "
+                         "tenant with SLO staleness accounting")
+    ap.add_argument("--fivm-features", type=int, default=24)
+    ap.add_argument("--fivm-capacity", type=int, default=256)
+    ap.add_argument("--fivm-bursts", type=int, default=8)
+    ap.add_argument("--fivm-burst-size", type=int, default=48)
     args = ap.parse_args()
+
+    if args.fivm:
+        serve_fivm(args)
+        return
 
     if args.arch == "custom-10m":
         cfg = custom_10m()

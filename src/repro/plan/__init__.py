@@ -18,7 +18,8 @@ across engine instances.  See docs/planner.md.
 
 from .planner import (MaintenancePlan, ViewPlan, WorkloadDescriptor,
                       firing_cost_flops, plan_for_engine, plan_program,
-                      program_fingerprint, static_plan, trigger_chain_costs)
+                      program_fingerprint, solver_resolve_strategy,
+                      static_plan, trigger_chain_costs)
 from .trigger_cache import TriggerCache, global_trigger_cache, mesh_cache_key
 from .adaptive import AdaptivePlanner
 from .calibrate import calibrate_cost_scale, calibrate_op_cost_scales
@@ -27,6 +28,7 @@ __all__ = [
     "MaintenancePlan", "ViewPlan", "WorkloadDescriptor",
     "plan_for_engine", "plan_program", "program_fingerprint",
     "static_plan", "firing_cost_flops", "trigger_chain_costs",
+    "solver_resolve_strategy",
     "calibrate_cost_scale", "calibrate_op_cost_scales",
     "TriggerCache", "global_trigger_cache", "mesh_cache_key",
     "AdaptivePlanner",

@@ -34,8 +34,10 @@ from typing import Dict, FrozenSet, List, Optional, Tuple
 from repro.core.codegen import trigger_touched_views
 from repro.core.compiler import CompiledProgram, compile_program
 from repro.core.cost import (batch_crossover_rank, batched_strategy,
+                             cholesky_factor_cost, cholesky_update_cost,
                              expr_cost, expr_cost_kinds,
-                             rowlocal_crossover_fraction, shape_of)
+                             rowlocal_crossover_fraction, shape_of,
+                             triangular_solve_cost)
 from repro.core.program import Program
 
 STRATEGIES = ("incremental", "reeval", "hybrid")
@@ -662,3 +664,25 @@ def static_plan(engine, strategy: str,
     return MaintenancePlan(fingerprint=base.fingerprint,
                            workload=base.workload, views=views,
                            mesh_key=base.mesh_key)
+
+
+def solver_resolve_strategy(n: int, pending_rank: int, *,
+                            cost_scale: float = 1.0) -> str:
+    """Price a normal-equation re-solve against the maintained ring
+    (repro.fivm): ``"update"`` applies ``pending_rank`` Cholesky
+    rank-one update/downdates to the cached factor of ``G + λI``
+    (``2kn²`` flops), ``"refactor"`` refactors from the maintained
+    gram (``n³/3``) — the §7 incremental-vs-reeval crossover
+    transplanted to the solver layer, crossing at ``k ≈ n/6``
+    (:func:`repro.core.cost.solver_crossover_rank`).
+
+    ``cost_scale`` biases the update side (>1 penalizes the Python-loop
+    rank-one kernel against the BLAS refactor; calibrated by the fivm
+    bench).  The back-substitution ``2n²p`` is common to both arms and
+    drops out of the comparison.
+    """
+    if pending_rank <= 0:
+        return "update"          # nothing pending: keep the factor
+    upd = cholesky_update_cost(n, pending_rank).flops * cost_scale
+    ref = cholesky_factor_cost(n).flops
+    return "update" if upd < ref else "refactor"

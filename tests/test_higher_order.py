@@ -461,3 +461,120 @@ def test_firing_cost_amortized_for_deferred_views():
     # first-order signature is the identity (regression pin)
     assert firing_cost_flops(compiled, binding, "A", 8, workload=wl,
                              view_orders={}) == full
+
+
+# ---------------------------------------------------------------------------
+# carrier × higher-order interplay (ISSUE 10 satellite: the gap left by
+# PR 8 and PR 9 landing independently)
+# ---------------------------------------------------------------------------
+#
+# Deferred (order>=2) engines bank firings in factored form and fold at
+# reads; sparsity-aware carriers arrive as RowLocal/NoOp objects.  The
+# contract where they meet: a no-op carrier is skipped without touching
+# the window, a row-local carrier WIDENS into the banked window (the
+# fold sweeps from a base snapshot, so there is no row-slab fast path
+# at depth >= 2 — `_rowlocal_ok` refuses deferred engines) — and both
+# must leave the folded views exact against re-evaluation.
+
+
+def _carrier_chain_prog(n=48, m=24, k=12):
+    from repro.core import Program, dim, matmul
+    p = Program(name="ho_carrier_chain")
+    X = p.input("X", (dim("N"), dim("M")))
+    W1 = p.input("W1", (dim("M"), dim("K")))
+    Y1 = p.let("Y1", matmul(X, W1))
+    p.let("Y2", matmul(Y1, p.input("W2", (dim("K"), dim("K")))))
+    p.outputs = ["Y1", "Y2"]
+    return p.bind_dims(N=n, M=m, K=k)
+
+
+def _carrier_chain_inputs(seed, n=48, m=24, k=12):
+    rng = np.random.default_rng(seed)
+    return {"X": rng.standard_normal((n, m)).astype(np.float32) * 0.3,
+            "W1": rng.standard_normal((m, k)).astype(np.float32) * 0.3,
+            "W2": rng.standard_normal((k, k)).astype(np.float32) * 0.3}
+
+
+@pytest.mark.parametrize("seed", CHAOS_SEEDS)
+def test_rowlocal_carriers_through_order2_engine(seed):
+    from repro.data import row_local_stream
+    prog = _carrier_chain_prog()
+    inputs = _carrier_chain_inputs(seed)
+    lazy = IncrementalEngine(prog, {"X": 4}, order=2, fold_window=3)
+    eager = IncrementalEngine(prog, {"X": 4})
+    ref = ReevalEngine(prog)
+    for e in (lazy, eager, ref):
+        e.initialize(dict(inputs))
+    stream = row_local_stream(48, 3, m=24, rank=2, seed=seed + 1)
+    for c in [stream.next_carrier() for _ in range(10)]:
+        lazy.apply_update("X", c)
+        eager.apply_update("X", c)
+        P, Q = c.factors()
+        ref.apply_update("X", P, Q)
+    lazy.output()
+    # the eager engine fired row-slabs (Y1/Y2 are row-local); the lazy
+    # one banked and folded — carriers widen at depth >= 2 by contract
+    assert eager.stats.rowlocal_firings == 10
+    assert lazy.stats.rowlocal_firings == 0
+    assert lazy.stats.folds > 0
+    for name in ("Y1", "Y2"):
+        a = np.asarray(lazy.views[name], np.float64)
+        b = np.asarray(ref.views[name], np.float64)
+        assert np.abs(a - b).max() / max(np.abs(b).max(), 1.0) < 1e-5
+
+
+@pytest.mark.parametrize("seed", CHAOS_SEEDS)
+def test_noop_carriers_through_order2_engine(seed):
+    from repro.core import NoOpCarrier
+    prog = _carrier_chain_prog()
+    lazy = IncrementalEngine(prog, {"X": 4}, order=2, fold_window=3)
+    lazy.initialize(_carrier_chain_inputs(seed))
+    before = {k: np.asarray(v).copy() for k, v in lazy.views.items()}
+    for _ in range(7):
+        lazy.apply_update("X", NoOpCarrier(48, 24))
+    lazy.output()
+    assert lazy.stats.noop_skips == 7
+    # no-ops never enter the window: nothing banked, nothing folded in
+    for name in ("Y1", "Y2"):
+        assert np.array_equal(np.asarray(lazy.views[name]), before[name])
+
+
+@pytest.mark.parametrize("seed", CHAOS_SEEDS)
+def test_mixed_carriers_and_dense_through_order2(seed):
+    """Interleaved RowLocal / LowRank / dense / NoOp updates through a
+    depth-2 window must fold to the re-evaluation answer."""
+    from repro.core import LowRankCarrier, NoOpCarrier
+    from repro.data import row_local_stream
+    rng = np.random.default_rng(seed + 5)
+    prog = _carrier_chain_prog()
+    inputs = _carrier_chain_inputs(seed)
+    lazy = IncrementalEngine(prog, {"X": 4}, order=2, fold_window=2)
+    ref = ReevalEngine(prog)
+    lazy.initialize(dict(inputs))
+    ref.initialize(dict(inputs))
+    stream = row_local_stream(48, 2, m=24, rank=2, seed=seed)
+    for step in range(12):
+        kind = step % 4
+        if kind == 0:
+            c = stream.next_carrier()
+            lazy.apply_update("X", c)
+            P, Q = c.factors()
+            ref.apply_update("X", P, Q)
+        elif kind == 1:
+            P = (rng.standard_normal((48, 2)) * 0.1).astype(np.float32)
+            Q = (rng.standard_normal((24, 2)) * 0.1).astype(np.float32)
+            lazy.apply_update("X", LowRankCarrier(P, Q))
+            ref.apply_update("X", P, Q)
+        elif kind == 2:
+            u = (rng.standard_normal((48, 4)) * 0.1).astype(np.float32)
+            v = (rng.standard_normal((24, 4)) * 0.1).astype(np.float32)
+            lazy.apply_update("X", u, v)
+            ref.apply_update("X", u, v)
+        else:
+            lazy.apply_update("X", NoOpCarrier(48, 24))
+    lazy.output()
+    for name in ("Y1", "Y2"):
+        a = np.asarray(lazy.views[name], np.float64)
+        b = np.asarray(ref.views[name], np.float64)
+        assert np.abs(a - b).max() / max(np.abs(b).max(), 1.0) < 1e-5
+    assert lazy.stats.folds > 0 and lazy.stats.noop_skips == 3
